@@ -1,0 +1,18 @@
+"""Shared helpers for the per-figure benchmark drivers.
+
+Every module exposes ``rows() -> list[(name, us_per_call, derived)]``;
+run.py concatenates them into the required ``name,us_per_call,derived`` CSV.
+"""
+
+from __future__ import annotations
+
+import os
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "artifacts")
+DRYRUN_DIR = os.path.join(ARTIFACT_DIR, "dryrun")
+
+Row = tuple[str, float, str]
+
+
+def fmt(rows: list[Row]) -> list[str]:
+    return [f"{n},{us:.2f},{d}" for n, us, d in rows]

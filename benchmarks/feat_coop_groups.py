@@ -1,0 +1,54 @@
+"""§V-B Cooperative Groups analogue: SRAD fused vs split phases.
+
+The paper's cooperative kernel fuses SRAD's two phases around a grid sync;
+ours fuses them in VMEM (`kernels.srad_stencil`). On the CPU validation
+host, the comparison uses the same structure at the XLA level: one jitted
+program (phases fused by XLA) vs two jitted programs with a materialized
+coefficient array between them (the two-launch HBM round-trip). The static
+bytes ratio is reported alongside wall time.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import Row
+from repro.core.harness import time_fn
+from repro.kernels.ref import _srad_coeff, srad_step_ref
+
+
+def _split_phase1(img):
+    c, _ = _srad_coeff(img, jnp.float32(0.05))
+    return c
+
+
+def _split_phase2(img, c):
+    _, (dN, dS, dW, dE) = _srad_coeff(img, jnp.float32(0.05))
+    cS = jnp.concatenate([c[1:], c[-1:]], axis=0)
+    cE = jnp.concatenate([c[:, 1:], c[:, -1:]], axis=1)
+    return img + 0.25 * 0.5 * (c * dN + cS * dS + c * dW + cE * dE)
+
+
+def rows() -> list[Row]:
+    out: list[Row] = []
+    fused = jax.jit(srad_step_ref)
+    p1 = jax.jit(_split_phase1)
+    p2 = jax.jit(_split_phase2)
+    for n in (128, 256, 512, 1024):
+        img = jnp.exp(0.1 * jax.random.normal(jax.random.key(0), (n, n)))
+        us_fused, _ = time_fn(fused, (img,), iters=5, warmup=2)
+
+        def split(img=img):
+            return p2(img, p1(img))
+
+        us_split, _ = time_fn(lambda: split(), (), iters=5, warmup=2)
+        out.append(
+            (
+                f"feat_cg.srad.{n}x{n}",
+                us_fused,
+                f"fused_us={us_fused:.1f};split_us={us_split:.1f};"
+                f"fused_speedup={us_split / max(us_fused, 1e-9):.2f}",
+            )
+        )
+    return out

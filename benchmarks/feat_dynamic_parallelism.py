@@ -1,0 +1,37 @@
+"""§V-B Dynamic Parallelism analogue: Mandelbrot escape-time vs
+Mariani–Silver adaptive tiles.
+
+The paper's cleanest feature win: speedup grows with image size as the
+adaptive algorithm skips ever-larger interior swaths. Ours skips whole
+tiles whose border lies in the set (bench/level2/mandelbrot.py); both
+versions produce identical images (validated there).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from benchmarks.common import Row
+from repro.bench.level2.mandelbrot import _pixel_grid, escape_time, mariani_silver
+from repro.core.harness import time_fn
+
+
+def rows(max_iter: int = 256) -> list[Row]:
+    out: list[Row] = []
+    for n in (128, 256, 512):
+        c = _pixel_grid(n)
+        flat = jax.jit(functools.partial(escape_time, max_iter=max_iter))
+        adap = jax.jit(functools.partial(mariani_silver, max_iter=max_iter))
+        us_flat, _ = time_fn(flat, (c,), iters=3, warmup=1)
+        us_adap, _ = time_fn(adap, (c,), iters=3, warmup=1)
+        out.append(
+            (
+                f"feat_dp.mandelbrot.{n}px",
+                us_adap,
+                f"flat_us={us_flat:.1f};adaptive_us={us_adap:.1f};"
+                f"speedup={us_flat / max(us_adap, 1e-9):.2f}",
+            )
+        )
+    return out

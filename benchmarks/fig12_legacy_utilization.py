@@ -1,0 +1,24 @@
+"""Figs. 1–2 analogue: the microbenchmark/basic-algorithm tiers (the SHOC-
+like levels 0–1), showing the diverse utilization spread the paper contrasts
+against Rodinia's flat profile."""
+
+from __future__ import annotations
+
+from benchmarks.common import Row
+from repro.core import run_suite
+
+
+def rows(preset: int = 0) -> list[Row]:
+    records = run_suite(
+        levels=(0, 1), preset=preset, iters=3, warmup=1,
+        include_backward=False, verbose=False,
+    )
+    return [
+        (
+            f"fig12.{r.name}",
+            r.us_per_call,
+            f"compute10={r.compute_util10};memory10={r.memory_util10};"
+            f"dominant={r.dominant};gbps={r.achieved_gbps:.2f}",
+        )
+        for r in records
+    ]

@@ -1,0 +1,32 @@
+"""Fig. 3: DNN forward-kernel utilization (the paper's cuDNN forward set)."""
+
+from __future__ import annotations
+
+from benchmarks.common import Row
+from repro.core import run_suite
+
+DNN = [
+    "activation", "pooling", "batchnorm", "connected", "convolution_xla",
+    "convolution_im2col", "dropout", "rnn", "softmax", "lrn",
+]
+
+
+def rows(preset: int = 0, backward: bool = False) -> list[Row]:
+    records = run_suite(
+        names=DNN, preset=preset, iters=3, warmup=1,
+        include_backward=backward, verbose=False,
+    )
+    tag = "fig4" if backward else "fig3"
+    out = []
+    for r in records:
+        if backward != r.name.endswith(".bwd"):
+            continue
+        out.append(
+            (
+                f"{tag}.{r.name}",
+                r.us_per_call,
+                f"compute10={r.compute_util10};memory10={r.memory_util10};"
+                f"dominant={r.dominant};gflops={r.achieved_gflops:.2f}",
+            )
+        )
+    return out

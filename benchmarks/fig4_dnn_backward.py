@@ -1,0 +1,10 @@
+"""Fig. 4: DNN backward-kernel utilization (gradients w.r.t. inputs+weights)."""
+
+from __future__ import annotations
+
+from benchmarks.common import Row
+from benchmarks.fig3_dnn_forward import rows as _fwd_rows
+
+
+def rows(preset: int = 0) -> list[Row]:
+    return _fwd_rows(preset=preset, backward=True)

@@ -1,0 +1,33 @@
+"""Fig. 5 analogue: utilization characterization of the Mirovia suite.
+
+The paper samples nvprof functional-unit utilization (0–10); we report the
+compute/memory roofline split (0–10 bars) from the compiled HLO plus the
+measured wall time per benchmark — same plot semantics, deterministic
+methodology (DESIGN.md §2).
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import Row
+from repro.core import run_suite
+
+_LEVEL2 = [
+    "cfd", "dwt2d_53", "dwt2d_97", "kmeans", "lavamd", "mandelbrot_flat",
+    "mandelbrot_ms", "nw", "particlefilter", "srad", "where",
+]
+
+
+def rows(preset: int = 0) -> list[Row]:
+    records = run_suite(
+        names=_LEVEL2, preset=preset, iters=3, warmup=1,
+        include_backward=False, verbose=False,
+    )
+    return [
+        (
+            f"fig5.{r.name}",
+            r.us_per_call,
+            f"compute10={r.compute_util10};memory10={r.memory_util10};"
+            f"dominant={r.dominant};gflops={r.achieved_gflops:.2f}",
+        )
+        for r in records
+    ]

@@ -1,0 +1,41 @@
+"""§Roofline table: per (arch × shape) roofline terms from the dry-run
+artifacts (artifacts/dryrun/*.json — produced by repro.launch.dryrun)."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import DRYRUN_DIR, Row
+
+
+def load_cells(mesh: str = "single", variant: str = "baseline") -> list[dict]:
+    cells = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, f"*__{mesh}__{variant}.json"))):
+        with open(path) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def rows(mesh: str = "single", variant: str = "baseline") -> list[Row]:
+    out: list[Row] = []
+    for c in load_cells(mesh, variant):
+        name = f"roofline.{c['arch']}.{c['shape']}.{mesh}"
+        if "skip" in c:
+            out.append((name, 0.0, f"skip={c['skip']}"))
+            continue
+        r = c["roofline"]
+        mem_gib = sum(c.get("memory", {}).values()) / 2**30
+        out.append(
+            (
+                name,
+                r["compute_s"] * 1e6,  # the compute-term microseconds
+                f"dominant={r['dominant']};fraction={r['roofline_fraction']:.3f};"
+                f"compute_s={r['compute_s']:.4g};memory_s={r['memory_s']:.4g};"
+                f"collective_s={r['collective_s']:.4g};"
+                f"useful_ratio={c['useful_compute_ratio']:.3f};"
+                f"mem_gib={mem_gib:.2f}",
+            )
+        )
+    return out

@@ -1,0 +1,76 @@
+"""Benchmark driver: one section per paper table/figure (DESIGN.md §7).
+
+Prints ``name,us_per_call,derived`` CSV. Sections:
+  table1   — suite listing (Table I)
+  fig12    — level 0/1 utilization (Figs. 1–2 analogue)
+  fig3/4   — DNN forward/backward utilization
+  fig5     — application-tier utilization (Fig. 5)
+  table2   — per-layer kernel classification (Table II)
+  feat_*   — §V-B modern-feature studies (HyperQ / UM / CG / DP analogues)
+  roofline — §Roofline table from the multi-pod dry-run artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--sections", nargs="*", default=None,
+                    help="subset of sections to run")
+    ap.add_argument("--preset", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    from benchmarks import (
+        feat_coop_groups,
+        feat_dynamic_parallelism,
+        feat_hyperq,
+        feat_unified_memory,
+        fig3_dnn_forward,
+        fig4_dnn_backward,
+        fig5_suite_utilization,
+        fig12_legacy_utilization,
+        roofline_table,
+        table1_suite,
+        table2_dnn_kernels,
+    )
+
+    sections = {
+        "table1": lambda: table1_suite.rows(),
+        "fig12": lambda: fig12_legacy_utilization.rows(preset=args.preset),
+        "fig3": lambda: fig3_dnn_forward.rows(preset=args.preset),
+        "fig4": lambda: fig4_dnn_backward.rows(preset=args.preset),
+        "fig5": lambda: fig5_suite_utilization.rows(preset=args.preset),
+        "table2": lambda: table2_dnn_kernels.rows(preset=max(args.preset, 1)),
+        "feat_hyperq": feat_hyperq.rows,
+        "feat_unified_memory": feat_unified_memory.rows,
+        "feat_coop_groups": feat_coop_groups.rows,
+        "feat_dynamic_parallelism": feat_dynamic_parallelism.rows,
+        "roofline": lambda: roofline_table.rows("single")
+        + roofline_table.rows("multi"),
+    }
+    selected = args.sections or list(sections)
+    print("name,us_per_call,derived")
+    failures = 0
+    for name in selected:
+        t0 = time.time()
+        try:
+            for n, us, d in sections[name]():
+                print(f"{n},{us:.2f},{d}", flush=True)
+        except Exception:  # noqa: BLE001
+            failures += 1
+            traceback.print_exc()
+            print(f"{name}.FAILED,0.00,error", flush=True)
+        print(
+            f"# section {name} done in {time.time() - t0:.1f}s",
+            file=sys.stderr, flush=True,
+        )
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,19 @@
+"""Table I: the suite listing — level, dwarf, application domain, modern
+feature (CUDA in the paper, TPU analogue here) per benchmark."""
+
+from __future__ import annotations
+
+from benchmarks.common import Row
+from repro.core.registry import all_benchmarks
+
+
+def rows() -> list[Row]:
+    out: list[Row] = []
+    for s in all_benchmarks():
+        derived = (
+            f"level={s.level};dwarf={s.dwarf or '-'};domain={s.domain or '-'};"
+            f"cuda_feature={s.cuda_feature or '-'};tpu_feature={s.tpu_feature or '-'};"
+            f"presets={len(s.presets)}"
+        )
+        out.append((f"table1.{s.name}", 0.0, derived))
+    return out

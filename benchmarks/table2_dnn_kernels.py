@@ -1,0 +1,48 @@
+"""Table II analogue: per-DNN-layer kernel classification.
+
+The paper maps each layer to its cuDNN kernel and classifies convolution as
+compute-bound vs batch-norm as memory-bound from IPC/eligible-warp metrics
+(§V-A). Here each layer maps to its TPU kernel (Pallas or XLA op) and the
+classification falls out of the roofline terms — the reproduction check is
+that convolution lands compute-dominant and batchnorm memory-dominant.
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import Row
+from repro.core import compile_workload
+from repro.core.registry import get_benchmark
+
+_KERNEL_MAP = {
+    "activation": ("xla:relu-fusion", "elementwise"),
+    "pooling": ("pallas:avgpool reshape-reduce", "reduce"),
+    "batchnorm": ("xla:bn-fusion", "stats+scale"),
+    "connected": ("pallas:matmul (MXU)", "gemm"),
+    "convolution_xla": ("xla:conv (MXU)", "conv"),
+    "convolution_im2col": ("pallas:matmul via im2col", "gemm"),
+    "dropout": ("xla:threefry fusion", "prng+mask"),
+    "rnn": ("xla:while(fused-gate gemm)", "scan-gemm"),
+    "softmax": ("pallas:online-softmax", "rowreduce"),
+    "lrn": ("pallas:banded-matmul (MXU)", "band-gemm"),
+}
+
+
+def rows(preset: int = 1) -> list[Row]:
+    out: list[Row] = []
+    for name, (kernel, kind) in _KERNEL_MAP.items():
+        w = get_benchmark(name).build_preset(preset)
+        for backward in (False, True):
+            if backward and w.fn_bwd is None:
+                continue
+            info = compile_workload(w, backward=backward)
+            r = info.roofline
+            out.append(
+                (
+                    f"table2.{name}{'.bwd' if backward else ''}",
+                    0.0,
+                    f"kernel={kernel};class={kind};dominant={r.dominant};"
+                    f"ai={r.arithmetic_intensity():.2f};"
+                    f"flops={r.flops:.3e};bytes={r.hbm_bytes:.3e}",
+                )
+            )
+    return out

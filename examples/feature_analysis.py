@@ -1,0 +1,38 @@
+"""Reproduce the paper's §V-B modern-feature studies in one command.
+
+Runs all four feature analogues (HyperQ, Unified Memory, Cooperative
+Groups, Dynamic Parallelism — DESIGN.md §2 explains each mapping) and
+prints the speedup curves the paper plots.
+
+Usage: PYTHONPATH=src python examples/feature_analysis.py
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))  # benchmarks/
+
+from benchmarks import (
+    feat_coop_groups,
+    feat_dynamic_parallelism,
+    feat_hyperq,
+    feat_unified_memory,
+)
+
+SECTIONS = [
+    ("HyperQ → batched occupancy (Pathfinder)", feat_hyperq.rows),
+    ("Unified Memory → staging vs prefetch (BFS)", feat_unified_memory.rows),
+    ("Cooperative Groups → fused stencil (SRAD)", feat_coop_groups.rows),
+    ("Dynamic Parallelism → adaptive tiles (Mandelbrot)", feat_dynamic_parallelism.rows),
+]
+
+
+def main() -> None:
+    for title, fn in SECTIONS:
+        print(f"\n=== {title} ===")
+        for name, us, derived in fn():
+            print(f"  {name:<28} {us:>12.1f} us   {derived}")
+
+
+if __name__ == "__main__":
+    main()

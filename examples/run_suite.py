@@ -1,0 +1,42 @@
+"""Run the full Mirovia/Altis suite — the paper's headline artifact.
+
+Level 0 microbenchmarks through the DNN section (forward + backward), with
+SHOC-style presets and Rodinia-style overrides, producing the utilization
+table + a JSON report.
+
+Usage:
+  PYTHONPATH=src python examples/run_suite.py [--preset 0..4] [--levels 0 1 2]
+  PYTHONPATH=src python examples/run_suite.py --names kmeans srad --preset 2
+"""
+
+import argparse
+
+from repro.core import run_suite
+from repro.core.results import to_csv_lines
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--preset", type=int, default=0)
+    ap.add_argument("--levels", type=int, nargs="*", default=[0, 1, 2])
+    ap.add_argument("--names", nargs="*", default=None)
+    ap.add_argument("--report", default="artifacts/suite_report.json")
+    ap.add_argument("--iters", type=int, default=5)
+    args = ap.parse_args()
+    records = run_suite(
+        levels=tuple(args.levels), names=args.names, preset=args.preset,
+        iters=args.iters, warmup=2, report_path=args.report, verbose=False,
+    )
+    print(f"{'benchmark':<34}{'us/call':>12}  {'compute':<12}{'memory':<12}dominant")
+    for r in records:
+        print(
+            f"{r.name:<34}{r.us_per_call:>12.1f}  "
+            f"|{'#' * r.compute_util10:<10}| |{'#' * r.memory_util10:<10}| {r.dominant}"
+        )
+    print(f"\n{len(records)} rows; report: {args.report}")
+    for line in to_csv_lines(records)[:5]:
+        print(line)
+
+
+if __name__ == "__main__":
+    main()

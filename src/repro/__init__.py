@@ -1,0 +1,17 @@
+"""repro: a TPU-native Mirovia/Altis benchmarking + training/serving framework.
+
+The package layers (bottom → top):
+
+- ``repro.kernels``    Pallas TPU kernels with pure-jnp oracles.
+- ``repro.bench``      The Mirovia/Altis benchmark suite (levels 0/1/2 + DNN).
+- ``repro.models``     LM-family model zoo (dense / MoE / SSM / hybrid / audio / VLM).
+- ``repro.core``       Benchmark-suite infrastructure: registry, presets, harness,
+                       roofline metrics, results, suite runner, feature analogues.
+- ``repro.data``       Deterministic synthetic data pipeline with host prefetch.
+- ``repro.optim``      AdamW + schedules + ZeRO + gradient compression.
+- ``repro.checkpoint`` Async fault-tolerant checkpointing.
+- ``repro.runtime``    Sharding rules, elastic re-mesh, straggler monitor, pipeline.
+- ``repro.launch``     Production mesh, multi-pod dry-run, train/serve drivers.
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,52 @@
+"""DNN: Activation — ReLU forward/backward (paper eq. 1)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.bench.dnn.common import dnn_workload
+from repro.core.presets import geometric_presets
+from repro.core.registry import DNN_DOMAIN, BenchmarkSpec, register
+
+
+def _make(n: int, c: int, hw: int):
+    shape = (n, c, hw, hw)
+
+    def make_inputs(seed: int):
+        return (jax.random.normal(jax.random.key(seed), shape, jnp.float32),)
+
+    def fn(x):
+        return jax.nn.relu(x)
+
+    def validate(out, args):
+        import numpy as np
+
+        (x,) = args
+        np.testing.assert_array_equal(np.asarray(out), np.maximum(np.asarray(x), 0))
+
+    numel = float(jnp.prod(jnp.array(shape)))
+    return dnn_workload(
+        f"activation.relu.{n}x{c}x{hw}x{hw}",
+        fn,
+        make_inputs,
+        flops=numel,
+        bytes_moved=numel * 8,
+        validate=validate,
+    )
+
+
+register(
+    BenchmarkSpec(
+        name="activation",
+        level=2,
+        dwarf="Unstructured Grid",
+        domain=DNN_DOMAIN,
+        cuda_feature=None,
+        tpu_feature=None,
+        presets=geometric_presets(
+            {"n": 8, "c": 16, "hw": 32}, scale_keys={"n": 2.0, "c": 2.0}, round_to=4
+        ),
+        build=lambda n, c, hw: _make(n, c, hw),
+    )
+)

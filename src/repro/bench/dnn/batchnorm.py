@@ -1,0 +1,77 @@
+"""DNN: Batchnorm — training-mode batch normalization fwd/bwd.
+
+The paper identifies BN as memory-bound (low FP-unit utilization, few
+eligible warps) vs convolution's compute-bound profile — our roofline terms
+reproduce that classification (see benchmarks/table2_dnn_kernels.py).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.bench.dnn.common import dnn_workload
+from repro.core.presets import geometric_presets
+from repro.core.registry import DNN_DOMAIN, BenchmarkSpec, register
+
+EPS = 1e-5
+
+
+def batchnorm_train(x, gamma, beta):
+    """NCHW batch norm over (N, H, W) per channel."""
+    mean = jnp.mean(x, axis=(0, 2, 3), keepdims=True)
+    var = jnp.var(x, axis=(0, 2, 3), keepdims=True)
+    xhat = (x - mean) * jax.lax.rsqrt(var + EPS)
+    return xhat * gamma[None, :, None, None] + beta[None, :, None, None]
+
+
+def _make(n: int, c: int, hw: int):
+    shape = (n, c, hw, hw)
+
+    def make_inputs(seed: int):
+        key = jax.random.key(seed)
+        kx, kg, kb = jax.random.split(key, 3)
+        return (
+            jax.random.normal(kx, shape, jnp.float32),
+            1.0 + 0.1 * jax.random.normal(kg, (c,), jnp.float32),
+            0.1 * jax.random.normal(kb, (c,), jnp.float32),
+        )
+
+    def validate(out, args):
+        import numpy as np
+
+        x, gamma, beta = args
+        o = np.asarray(out)
+        # Normalized-then-affine: per-channel mean≈beta, std≈gamma.
+        np.testing.assert_allclose(
+            o.mean(axis=(0, 2, 3)), np.asarray(beta), atol=1e-4
+        )
+        np.testing.assert_allclose(
+            o.std(axis=(0, 2, 3)), np.abs(np.asarray(gamma)), rtol=1e-3, atol=1e-4
+        )
+
+    numel = float(n * c * hw * hw)
+    return dnn_workload(
+        f"batchnorm.{n}x{c}x{hw}x{hw}",
+        batchnorm_train,
+        make_inputs,
+        flops=numel * 8,
+        bytes_moved=numel * 4 * 3,
+        validate=validate,
+    )
+
+
+register(
+    BenchmarkSpec(
+        name="batchnorm",
+        level=2,
+        dwarf="Unstructured Grid",
+        domain=DNN_DOMAIN,
+        cuda_feature=None,
+        tpu_feature=None,
+        presets=geometric_presets(
+            {"n": 8, "c": 16, "hw": 32}, scale_keys={"n": 2.0, "c": 2.0}, round_to=4
+        ),
+        build=lambda n, c, hw: _make(n, c, hw),
+    )
+)

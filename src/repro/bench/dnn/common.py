@@ -1,0 +1,60 @@
+"""Shared scaffolding for the DNN-section benchmarks (paper §IV-A.4).
+
+Every DNN benchmark reports both passes (Figs. 3 and 4): ``fn`` is the layer
+forward; ``fn_bwd`` computes the gradient of a scalar loss (mean of outputs)
+w.r.t. every floating-point input — the cuDNN *Backward kernels of Table II
+compute exactly these input/weight gradients. Backward FLOPs default to the
+standard 2× forward.
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.registry import Workload
+
+__all__ = ["dnn_workload"]
+
+
+def _mean_of_outputs(out) -> jax.Array:
+    leaves = [l for l in jax.tree_util.tree_leaves(out) if jnp.issubdtype(l.dtype, jnp.floating)]
+    return sum(jnp.mean(l.astype(jnp.float32)) for l in leaves)
+
+
+def dnn_workload(
+    name: str,
+    fn: Callable,
+    make_inputs: Callable[[int], tuple],
+    *,
+    flops: float,
+    bytes_moved: float,
+    flops_bwd: float | None = None,
+    validate: Callable | None = None,
+    diff_argnums: tuple[int, ...] | None = None,
+) -> Workload:
+    def loss(*args):
+        return _mean_of_outputs(fn(*args))
+
+    if diff_argnums is None:
+        # Differentiate w.r.t. every floating-point positional arg.
+        sample = make_inputs(0)
+        diff_argnums = tuple(
+            i
+            for i, a in enumerate(sample)
+            if hasattr(a, "dtype") and jnp.issubdtype(a.dtype, jnp.floating)
+        )
+    grad_fn = jax.grad(loss, argnums=diff_argnums) if diff_argnums else None
+    return Workload(
+        name=name,
+        fn=fn,
+        make_inputs=make_inputs,
+        flops=flops,
+        bytes_moved=bytes_moved,
+        validate=validate,
+        fn_bwd=grad_fn,
+        flops_bwd=flops_bwd if flops_bwd is not None else 2.0 * flops,
+        meta={"dnn": True},
+    )

@@ -1,0 +1,67 @@
+"""DNN: Connected — fully-connected layer fwd/bwd (cuDNN sgemm analogue).
+
+Forward is x@W+b on the Pallas matmul kernel (TPU) — the paper's Table II
+maps this layer to `maxwell_sgemm_128x64_tn`; ours maps to the MXU blocked
+matmul.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.bench.dnn.common import dnn_workload
+from repro.core.presets import geometric_presets
+from repro.core.registry import DNN_DOMAIN, BenchmarkSpec, register
+from repro.kernels import ops
+
+
+def _make(batch: int, din: int, dout: int):
+    def make_inputs(seed: int):
+        key = jax.random.key(seed)
+        kx, kw, kb = jax.random.split(key, 3)
+        s = din**-0.5
+        return (
+            jax.random.normal(kx, (batch, din), jnp.float32),
+            s * jax.random.normal(kw, (din, dout), jnp.float32),
+            s * jax.random.normal(kb, (dout,), jnp.float32),
+        )
+
+    def fn(x, w, b):
+        return ops.matmul(x, w) + b[None]
+
+    def validate(out, args):
+        import numpy as np
+
+        x, w, b = args
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(x) @ np.asarray(w) + np.asarray(b),
+            rtol=2e-4, atol=2e-5,
+        )
+
+    return dnn_workload(
+        f"connected.b{batch}.{din}x{dout}",
+        fn,
+        make_inputs,
+        flops=2.0 * batch * din * dout,
+        bytes_moved=4.0 * (batch * din + din * dout + batch * dout),
+        validate=validate,
+    )
+
+
+register(
+    BenchmarkSpec(
+        name="connected",
+        level=2,
+        dwarf="Dense linear algebra",
+        domain=DNN_DOMAIN,
+        cuda_feature=None,
+        tpu_feature="MXU blocked matmul (Pallas)",
+        presets=geometric_presets(
+            {"batch": 64, "din": 256, "dout": 256},
+            scale_keys={"batch": 2.0, "din": 2.0, "dout": 2.0},
+            round_to=64,
+        ),
+        build=lambda batch, din, dout: _make(batch, din, dout),
+    )
+)

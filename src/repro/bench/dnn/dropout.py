@@ -1,0 +1,68 @@
+"""DNN: Dropout — stochastic regularization fwd/bwd (paper: dropout_fp/bp).
+
+JAX's counter-based threefry PRNG generates the mask inside the kernel (no
+mask tensor round-trip — the memory optimization cuDNN's dropout_fp does
+with Philox on GPU).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.bench.dnn.common import dnn_workload
+from repro.core.presets import geometric_presets
+from repro.core.registry import DNN_DOMAIN, BenchmarkSpec, register
+
+RATE = 0.5
+
+
+def dropout(x, key):
+    keep = jax.random.bernoulli(key, 1.0 - RATE, x.shape)
+    return jnp.where(keep, x / (1.0 - RATE), 0.0)
+
+
+def _make(n: int, d: int):
+    shape = (n, d)
+
+    def make_inputs(seed: int):
+        key = jax.random.key(seed)
+        kx, kd = jax.random.split(key)
+        return (jax.random.normal(kx, shape, jnp.float32), kd)
+
+    def validate(out, args):
+        import numpy as np
+
+        x, _ = args
+        o, xv = np.asarray(out), np.asarray(x)
+        kept = o != 0
+        frac = kept.mean()
+        assert abs(frac - (1 - RATE)) < 0.05, f"keep fraction {frac}"
+        np.testing.assert_allclose(o[kept], xv[kept] / (1 - RATE), rtol=1e-6)
+
+    numel = float(n * d)
+    return dnn_workload(
+        f"dropout.{n}x{d}",
+        dropout,
+        make_inputs,
+        flops=numel * 2,
+        bytes_moved=numel * 8,
+        validate=validate,
+        diff_argnums=(0,),
+    )
+
+
+register(
+    BenchmarkSpec(
+        name="dropout",
+        level=2,
+        dwarf="Unstructured Grid",
+        domain=DNN_DOMAIN,
+        cuda_feature=None,
+        tpu_feature="in-kernel counter-based PRNG",
+        presets=geometric_presets(
+            {"n": 256, "d": 1024}, scale_keys={"n": 4.0, "d": 2.0}, round_to=64
+        ),
+        build=lambda n, d: _make(n, d),
+    )
+)

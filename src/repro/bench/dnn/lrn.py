@@ -1,0 +1,59 @@
+"""DNN: LRN — local response normalization fwd/bwd (paper eq. 3).
+
+Forward runs the banded-matmul Pallas kernel on TPU (`kernels.lrn`); the
+oracle cross-check keeps the two in lockstep.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.bench.dnn.common import dnn_workload
+from repro.core.presets import geometric_presets
+from repro.core.registry import DNN_DOMAIN, BenchmarkSpec, register
+from repro.kernels import ops, ref
+
+
+def _make(n: int, c: int, hw: int):
+    shape = (n, c, hw, hw)
+
+    def make_inputs(seed: int):
+        return (jax.random.normal(jax.random.key(seed), shape, jnp.float32),)
+
+    def fn(x):
+        return ops.lrn(x)
+
+    def validate(out, args):
+        import numpy as np
+
+        (x,) = args
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(ref.lrn_ref(x)), rtol=1e-4, atol=1e-5
+        )
+
+    numel = float(n * c * hw * hw)
+    return dnn_workload(
+        f"lrn.{n}x{c}x{hw}x{hw}",
+        fn,
+        make_inputs,
+        flops=numel * (2 * c + 6),  # banded matmul dominates
+        bytes_moved=numel * 8,
+        validate=validate,
+    )
+
+
+register(
+    BenchmarkSpec(
+        name="lrn",
+        level=2,
+        dwarf="Unstructured Grid",
+        domain=DNN_DOMAIN,
+        cuda_feature=None,
+        tpu_feature="banded matmul on MXU (Pallas)",
+        presets=geometric_presets(
+            {"n": 8, "c": 32, "hw": 16}, scale_keys={"n": 2.0, "c": 2.0}, round_to=4
+        ),
+        build=lambda n, c, hw: _make(n, c, hw),
+    )
+)

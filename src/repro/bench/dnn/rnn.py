@@ -1,0 +1,84 @@
+"""DNN: RNN — LSTM layer fwd/bwd over a sequence (paper: LSTM via cuDNN).
+
+One fused-gate LSTM (the 4-gate projection is a single matmul, the
+`maxwell_sgemm_128x64_tn` of Table II) scanned over time with `lax.scan`.
+The scan is also the structural template for the model zoo's recurrent
+blocks (xLSTM sLSTM, Mamba decode).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.bench.dnn.common import dnn_workload
+from repro.core.presets import geometric_presets
+from repro.core.registry import DNN_DOMAIN, BenchmarkSpec, register
+
+
+def lstm_forward(x, wx, wh, b):
+    """x (B, T, D); wx (D, 4H); wh (H, 4H); b (4H,) -> outputs (B, T, H)."""
+    B = x.shape[0]
+    H = wh.shape[0]
+
+    def cell(carry, xt):
+        h, c = carry
+        gates = xt @ wx + h @ wh + b[None]
+        i, f, g, o = jnp.split(gates, 4, axis=-1)
+        i, f, o = jax.nn.sigmoid(i), jax.nn.sigmoid(f), jax.nn.sigmoid(o)
+        g = jnp.tanh(g)
+        c = f * c + i * g
+        h = o * jnp.tanh(c)
+        return (h, c), h
+
+    init = (jnp.zeros((B, H), x.dtype), jnp.zeros((B, H), x.dtype))
+    _, hs = jax.lax.scan(cell, init, jnp.swapaxes(x, 0, 1))
+    return jnp.swapaxes(hs, 0, 1)
+
+
+def _make(batch: int, seq: int, d: int, h: int):
+    def make_inputs(seed: int):
+        key = jax.random.key(seed)
+        kx, kwx, kwh, kb = jax.random.split(key, 4)
+        return (
+            jax.random.normal(kx, (batch, seq, d), jnp.float32),
+            d**-0.5 * jax.random.normal(kwx, (d, 4 * h), jnp.float32),
+            h**-0.5 * jax.random.normal(kwh, (h, 4 * h), jnp.float32),
+            jnp.zeros((4 * h,), jnp.float32),
+        )
+
+    def validate(out, args):
+        import numpy as np
+
+        o = np.asarray(out)
+        assert o.shape == (batch, seq, h)
+        assert np.all(np.isfinite(o))
+        assert np.all(np.abs(o) <= 1.0)  # h = o·tanh(c) is bounded
+
+    flops = 2.0 * batch * seq * (d + h) * 4 * h
+    return dnn_workload(
+        f"rnn.lstm.b{batch}.t{seq}.d{d}.h{h}",
+        lstm_forward,
+        make_inputs,
+        flops=flops,
+        bytes_moved=4.0 * (batch * seq * (d + h) + (d + h) * 4 * h),
+        validate=validate,
+    )
+
+
+register(
+    BenchmarkSpec(
+        name="rnn",
+        level=2,
+        dwarf="Dense linear algebra",
+        domain=DNN_DOMAIN,
+        cuda_feature=None,
+        tpu_feature="fused-gate scan",
+        presets=geometric_presets(
+            {"batch": 16, "seq": 32, "d": 128, "h": 128},
+            scale_keys={"batch": 2.0, "d": 2.0, "h": 2.0},
+            round_to=32,
+        ),
+        build=lambda batch, seq, d, h: _make(batch, seq, d, h),
+    )
+)

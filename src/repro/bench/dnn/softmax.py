@@ -1,0 +1,56 @@
+"""DNN: Softmax — classifier output layer fwd/bwd (paper eq. 2)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.bench.dnn.common import dnn_workload
+from repro.core.presets import geometric_presets
+from repro.core.registry import DNN_DOMAIN, BenchmarkSpec, register
+from repro.kernels import ops
+
+
+def _make(batch: int, classes: int):
+    def make_inputs(seed: int):
+        return (
+            5.0 * jax.random.normal(jax.random.key(seed), (batch, classes), jnp.float32),
+        )
+
+    def fn(x):
+        return ops.softmax(x)
+
+    def validate(out, args):
+        import numpy as np
+
+        o = np.asarray(out)
+        np.testing.assert_allclose(o.sum(-1), 1.0, rtol=1e-5)
+        assert np.all(o >= 0)
+
+    numel = float(batch * classes)
+    return dnn_workload(
+        f"softmax.{batch}x{classes}",
+        fn,
+        make_inputs,
+        flops=numel * 5,
+        bytes_moved=numel * 8,
+        validate=validate,
+    )
+
+
+register(
+    BenchmarkSpec(
+        name="softmax",
+        level=2,
+        dwarf="Unstructured Grid",
+        domain=DNN_DOMAIN,
+        cuda_feature=None,
+        tpu_feature="online-softmax kernel (Pallas)",
+        presets=geometric_presets(
+            {"batch": 128, "classes": 1024},
+            scale_keys={"batch": 4.0, "classes": 2.0},
+            round_to=64,
+        ),
+        build=lambda batch, classes: _make(batch, classes),
+    )
+)

@@ -1,0 +1,84 @@
+"""Level 0: DeviceMemory — device memory-hierarchy bandwidth.
+
+The paper measures global/constant/shared memory. The TPU hierarchy is
+HBM→VMEM→VREG; we expose three streams that pin each level:
+
+- ``stream``: y = a·x + y over N elements (HBM-bound, 3 N·4 bytes),
+- ``reduce``: sum(x) (HBM read-bound, N·4 bytes),
+- ``vmem``:   a VMEM-resident tile iterated k times inside one kernel-sized
+  jit region (the shared-memory analogue: traffic stays on-chip after the
+  first load; reported bytes count only the HBM load).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.presets import geometric_presets
+from repro.core.registry import BenchmarkSpec, Workload, register
+
+
+def _inputs(n: int):
+    def make_inputs(seed: int):
+        key = jax.random.key(seed)
+        kx, ky = jax.random.split(key)
+        return (
+            jax.random.normal(kx, (n,), jnp.float32),
+            jax.random.normal(ky, (n,), jnp.float32),
+        )
+
+    return make_inputs
+
+
+def _make(n: int, op: str) -> Workload:
+    if op == "stream":
+
+        def fn(x, y):
+            return 1.0001 * x + y
+
+        flops, nbytes = 2.0 * n, 12.0 * n
+    elif op == "reduce":
+
+        def fn(x, y):
+            return jnp.sum(x)
+
+        flops, nbytes = float(n), 4.0 * n
+    elif op == "vmem":
+        k = 64
+
+        def fn(x, y):
+            tile = x[: 128 * 128].reshape(128, 128)
+
+            def body(_, t):
+                return t * 0.999 + 0.001
+
+            return jax.lax.fori_loop(0, k, body, tile)
+
+        flops, nbytes = 2.0 * 128 * 128 * k, 4.0 * 128 * 128 * 2
+    else:
+        raise ValueError(op)
+    return Workload(
+        name=f"devicemem.{op}.n{n}",
+        fn=fn,
+        make_inputs=_inputs(n),
+        flops=flops,
+        bytes_moved=nbytes,
+    )
+
+
+for _op in ("stream", "reduce", "vmem"):
+    register(
+        BenchmarkSpec(
+            name=f"devicemem_{_op}",
+            level=0,
+            dwarf=None,
+            domain=None,
+            cuda_feature=None,
+            tpu_feature=f"memory hierarchy: {_op}",
+            presets=geometric_presets(
+                {"n": 1 << 16, "op": _op}, scale_keys={"n": 8.0}, round_to=128
+            ),
+            build=lambda n, op: _make(n, op),
+        )
+    )

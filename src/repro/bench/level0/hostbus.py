@@ -1,0 +1,88 @@
+"""Level 0: BusSpeedDownload / BusSpeedReadback.
+
+The paper measures PCIe in both directions over 1 kB–500 kB transfers. The
+TPU analogue is the host↔HBM staging path (PCIe on real pods too); in JAX the
+download direction is ``jax.device_put`` of a host buffer and readback is
+``np.asarray`` of a device buffer. These are deliberately *not* jitted — the
+transfer itself is the benchmark (``meta={'no_jit': True}``).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.presets import geometric_presets
+from repro.core.registry import BenchmarkSpec, Workload, register
+
+
+def _make_download(nbytes: int) -> Workload:
+    n = nbytes // 4
+
+    def make_inputs(seed: int):
+        rng = np.random.default_rng(seed)
+        return (rng.standard_normal(n, dtype=np.float32),)
+
+    def fn(host_array):
+        return jax.device_put(host_array)
+
+    return Workload(
+        name=f"busspeeddownload.n{nbytes}",
+        fn=fn,
+        make_inputs=make_inputs,
+        bytes_moved=float(nbytes),
+        meta={"no_jit": True},
+    )
+
+
+def _make_readback(nbytes: int) -> Workload:
+    n = nbytes // 4
+
+    def make_inputs(seed: int):
+        # Device-resident input; fn pulls it back to host.
+        key = jax.random.key(seed)
+        return (jax.block_until_ready(jax.random.normal(key, (n,), jnp.float32)),)
+
+    def fn(dev_array):
+        return np.asarray(dev_array)
+
+    return Workload(
+        name=f"busspeedreadback.n{nbytes}",
+        fn=fn,
+        make_inputs=make_inputs,
+        bytes_moved=float(nbytes),
+        meta={"no_jit": True},
+    )
+
+
+_PRESETS = geometric_presets(
+    {"nbytes": 1 << 10}, scale_keys={"nbytes": 16.0}, round_to=4
+)  # 1 KiB .. 64 MiB
+
+register(
+    BenchmarkSpec(
+        name="busspeeddownload",
+        level=0,
+        dwarf=None,
+        domain=None,
+        cuda_feature=None,
+        tpu_feature="host staging (device_put)",
+        presets=_PRESETS,
+        build=lambda nbytes: _make_download(nbytes),
+    )
+)
+
+register(
+    BenchmarkSpec(
+        name="busspeedreadback",
+        level=0,
+        dwarf=None,
+        domain=None,
+        cuda_feature=None,
+        tpu_feature="host readback (np.asarray)",
+        presets=_PRESETS,
+        build=lambda nbytes: _make_readback(nbytes),
+    )
+)

@@ -1,0 +1,65 @@
+"""Level 0: MaxFlops — peak achievable FLOP/s.
+
+The paper's "Half Precision" MaxFlops maps to **bf16 on the MXU**: a chain of
+dependent square matmuls (so nothing is elided) at MXU-aligned sizes. The
+suite reports achieved GFLOP/s; the roofline pipeline compares it against
+197 TFLOP/s on the target part. fp32 variant included (VPU/precision study,
+the paper's "single precision" case).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.presets import geometric_presets
+from repro.core.registry import BenchmarkSpec, Workload, register
+from repro.kernels import ops
+
+
+def _make(n: int, chain: int, dtype: str) -> Workload:
+    dt = jnp.bfloat16 if dtype == "bf16" else jnp.float32
+
+    def make_inputs(seed: int):
+        key = jax.random.key(seed)
+        ka, kb = jax.random.split(key)
+        scale = 1.0 / (n**0.5)  # keep the chain numerically bounded
+        return (
+            (jax.random.normal(ka, (n, n), jnp.float32) * scale).astype(dt),
+            (jax.random.normal(kb, (n, n), jnp.float32) * scale).astype(dt),
+        )
+
+    def fn(a, b):
+        def body(_, acc):
+            return ops.matmul(acc, b)
+
+        return jax.lax.fori_loop(0, chain, body, a)
+
+    return Workload(
+        name=f"maxflops.{dtype}.n{n}x{chain}",
+        fn=fn,
+        make_inputs=make_inputs,
+        flops=2.0 * n * n * n * chain,
+        bytes_moved=2.0 * n * n * jnp.dtype(dt).itemsize,
+    )
+
+
+for _dtype in ("bf16", "f32"):
+    register(
+        BenchmarkSpec(
+            name=f"maxflops_{_dtype}",
+            level=0,
+            dwarf=None,
+            domain=None,
+            cuda_feature="Half Precision" if _dtype == "bf16" else None,
+            tpu_feature="MXU bf16 peak" if _dtype == "bf16" else "VPU fp32 peak",
+            presets=geometric_presets(
+                {"n": 256, "chain": 4, "dtype": _dtype},
+                scale_keys={"n": 2.0},
+                round_to=128,
+            ),
+            build=functools.partial(_make),
+        )
+    )

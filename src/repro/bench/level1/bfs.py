@@ -1,0 +1,119 @@
+"""Level 1: BFS — breadth-first search (the Unified-Memory benchmark).
+
+Control-flow-intensive graph traversal. TPU adaptation: the GPU version is a
+per-thread frontier queue; the JAX idiom is *frontier-parallel edge
+relaxation* — each step scatters the frontier across all edges at once
+(``dst.at[...].max``) inside a ``lax.while_loop`` that runs until the
+frontier empties (data-dependent trip count, the paper's "irregular
+execution path" point). The §V-B unified-memory study (staged vs prefetched
+host graphs) lives in ``benchmarks/feat_unified_memory.py`` on top of this
+workload.
+
+Graphs are deterministic uniform-random digraphs (the paper generates random
+graphs too, and notes the resulting speedup noise).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.presets import geometric_presets
+from repro.core.registry import BenchmarkSpec, Workload, register
+
+UNREACHED = jnp.int32(2**30)
+
+
+def make_random_graph(n_nodes: int, n_edges: int, seed: int) -> tuple[np.ndarray, np.ndarray]:
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, n_nodes, n_edges, dtype=np.int32)
+    dst = rng.integers(0, n_nodes, n_edges, dtype=np.int32)
+    return src, dst
+
+
+def bfs_host_reference(n_nodes: int, src: np.ndarray, dst: np.ndarray, root: int) -> np.ndarray:
+    """Plain python BFS — the oracle for tests/validate."""
+    adj: list[list[int]] = [[] for _ in range(n_nodes)]
+    for s, d in zip(src.tolist(), dst.tolist()):
+        adj[s].append(d)
+    depth = np.full(n_nodes, int(UNREACHED), dtype=np.int64)
+    depth[root] = 0
+    frontier = [root]
+    level = 0
+    while frontier:
+        level += 1
+        nxt = []
+        for u in frontier:
+            for w in adj[u]:
+                if depth[w] > level:
+                    depth[w] = level
+                    nxt.append(w)
+        frontier = nxt
+    return depth
+
+
+def bfs_depths(n_nodes: int, src: jax.Array, dst: jax.Array, root: int) -> jax.Array:
+    """Frontier-parallel BFS: returns per-node depth (UNREACHED if not)."""
+    depth0 = jnp.full((n_nodes,), UNREACHED, jnp.int32).at[root].set(0)
+
+    def cond(state):
+        depth, frontier, level = state
+        return jnp.any(frontier)
+
+    def body(state):
+        depth, frontier, level = state
+        active = frontier[src]  # edges whose source is on the frontier
+        # Relax: any touched node gets depth level+1 if currently deeper.
+        touched = jnp.zeros((n_nodes,), jnp.bool_).at[dst].max(active)
+        improved = touched & (depth > level + 1)
+        depth = jnp.where(improved, level + 1, depth)
+        return depth, improved, level + 1
+
+    depth, _, _ = jax.lax.while_loop(
+        cond, body, (depth0, jnp.zeros((n_nodes,), jnp.bool_).at[root].set(True), jnp.int32(0))
+    )
+    return depth
+
+
+def _make(n_nodes: int, n_edges: int) -> Workload:
+    def make_inputs(seed: int):
+        src, dst = make_random_graph(n_nodes, n_edges, seed)
+        return (jnp.asarray(src), jnp.asarray(dst))
+
+    def fn(src, dst):
+        return bfs_depths(n_nodes, src, dst, root=0)
+
+    def validate(out, args):
+        src, dst = args
+        want = bfs_host_reference(n_nodes, np.asarray(src), np.asarray(dst), 0)
+        got = np.asarray(out).astype(np.int64)
+        np.testing.assert_array_equal(got, want)
+
+    return Workload(
+        name=f"bfs.n{n_nodes}.e{n_edges}",
+        fn=fn,
+        make_inputs=make_inputs,
+        flops=2.0 * n_edges,  # per level bound; reported per-call
+        bytes_moved=8.0 * n_edges,
+        validate=validate,
+    )
+
+
+register(
+    BenchmarkSpec(
+        name="bfs",
+        level=1,
+        dwarf="Graph traversal",
+        domain=None,
+        cuda_feature="Unified Memory",
+        tpu_feature="host staging vs prefetch (feat_unified_memory)",
+        presets=geometric_presets(
+            {"n_nodes": 1 << 10, "n_edges": 1 << 13},
+            scale_keys={"n_nodes": 8.0, "n_edges": 8.0},
+            round_to=64,
+        ),
+        build=lambda n_nodes, n_edges: _make(n_nodes, n_edges),
+    )
+)

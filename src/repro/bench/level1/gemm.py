@@ -1,0 +1,62 @@
+"""Level 1: General Matrix Multiply (dense linear algebra dwarf).
+
+The paper's GEMM covers single/double precision with and without transposed
+inputs. TPU adaptation: bf16 replaces fp16/fp64 as the second precision (the
+MXU's native format; fp64 has no TPU unit), and the kernel is our Pallas
+blocked matmul on TPU / XLA dot on CPU.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.presets import geometric_presets
+from repro.core.registry import BenchmarkSpec, Workload, register
+from repro.kernels import ops
+
+
+def _make(n: int, dtype: str, transpose: str) -> Workload:
+    dt = {"f32": jnp.float32, "bf16": jnp.bfloat16}[dtype]
+
+    def make_inputs(seed: int):
+        key = jax.random.key(seed)
+        ka, kb = jax.random.split(key)
+        a = jax.random.normal(ka, (n, n), jnp.float32).astype(dt)
+        b = jax.random.normal(kb, (n, n), jnp.float32).astype(dt)
+        return (a, b)
+
+    def fn(a, b):
+        if "t" in transpose[:1]:  # "tn"/"tt": transpose A
+            a = a.T
+        if transpose[1:] == "t":
+            b = b.T
+        return ops.matmul(a, b)
+
+    return Workload(
+        name=f"gemm.{dtype}.{transpose}.n{n}",
+        fn=fn,
+        make_inputs=make_inputs,
+        flops=2.0 * n**3,
+        bytes_moved=3.0 * n * n * jnp.dtype(dt).itemsize,
+    )
+
+
+for _dtype in ("f32", "bf16"):
+    for _tr in ("nn", "tn"):
+        register(
+            BenchmarkSpec(
+                name=f"gemm_{_dtype}_{_tr}",
+                level=1,
+                dwarf="Dense linear algebra",
+                domain=None,
+                cuda_feature=None,
+                tpu_feature="MXU blocked matmul (Pallas)",
+                presets=geometric_presets(
+                    {"n": 256, "dtype": _dtype, "transpose": _tr},
+                    scale_keys={"n": 2.0},
+                    round_to=128,
+                ),
+                build=lambda n, dtype, transpose: _make(n, dtype, transpose),
+            )
+        )

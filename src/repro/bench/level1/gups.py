@@ -1,0 +1,62 @@
+"""Level 1: GUPS — giga-updates per second (random memory access).
+
+Random read-modify-write over a large table. TPU adaptation: GPU GUPS uses
+atomics; the JAX idiom is ``table.at[idx].add(...)`` which XLA lowers to a
+sorted scatter-add — the benchmark therefore stresses the scatter path (the
+TPU's weak spot that SparseCore targets on newer parts; documented in
+DESIGN.md). ``derived`` reports GUPS = updates / second.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.presets import geometric_presets
+from repro.core.registry import BenchmarkSpec, Workload, register
+
+
+def _make(table_n: int, updates: int) -> Workload:
+    def make_inputs(seed: int):
+        key = jax.random.key(seed)
+        kt, ki, kv = jax.random.split(key, 3)
+        return (
+            jax.random.normal(kt, (table_n,), jnp.float32),
+            jax.random.randint(ki, (updates,), 0, table_n),
+            jax.random.normal(kv, (updates,), jnp.float32),
+        )
+
+    def fn(table, idx, vals):
+        return table.at[idx].add(vals)
+
+    def validate(out, args):
+        table, idx, vals = args
+        assert float(jnp.sum(out) - jnp.sum(table) - jnp.sum(vals)) < 1e-1
+
+    return Workload(
+        name=f"gups.t{table_n}.u{updates}",
+        fn=fn,
+        make_inputs=make_inputs,
+        flops=float(updates),
+        bytes_moved=12.0 * updates,  # idx read + table read + table write
+        validate=validate,
+        meta={"updates": updates},
+    )
+
+
+register(
+    BenchmarkSpec(
+        name="gups",
+        level=1,
+        dwarf=None,
+        domain=None,
+        cuda_feature=None,
+        tpu_feature="scatter-add path",
+        presets=geometric_presets(
+            {"table_n": 1 << 16, "updates": 1 << 14},
+            scale_keys={"table_n": 8.0, "updates": 8.0},
+            round_to=128,
+        ),
+        build=lambda table_n, updates: _make(table_n, updates),
+    )
+)

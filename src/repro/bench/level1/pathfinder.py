@@ -1,0 +1,75 @@
+"""Level 1: Pathfinder — shortest path down a grid (the HyperQ benchmark).
+
+Dynamic-programming row sweep: dist'[j] = w[i,j] + min(dist[j-1..j+1]).
+Irregular parallelism comes from the data-dependent min selection per lane.
+TPU adaptation of HyperQ (§V-B): instead of 32 hardware work queues, idle
+compute is filled by *batching independent instances* — the feature benchmark
+(`benchmarks/feat_hyperq.py`) vmaps 1..32 instances of this workload through
+``repro.core.features.concurrent_instances`` and reports the speedup curve
+the paper's Figure shows (saturating near full occupancy).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.presets import geometric_presets
+from repro.core.registry import BenchmarkSpec, Workload, register
+
+
+def pathfinder_min_path(grid: jax.Array) -> jax.Array:
+    """Min path cost entering anywhere in row 0, moving down (rows, cols)."""
+
+    def step(dist, row):
+        left = jnp.concatenate([dist[:1], dist[:-1]])
+        right = jnp.concatenate([dist[1:], dist[-1:]])
+        return row + jnp.minimum(dist, jnp.minimum(left, right)), None
+
+    dist, _ = jax.lax.scan(step, grid[0], grid[1:])
+    return dist
+
+
+def _make(rows: int, cols: int) -> Workload:
+    def make_inputs(seed: int):
+        key = jax.random.key(seed)
+        return (jax.random.randint(key, (rows, cols), 0, 10).astype(jnp.int32),)
+
+    def validate(out, args):
+        (grid,) = args
+        import numpy as np
+
+        g = np.asarray(grid)
+        dist = g[0].copy()
+        for i in range(1, rows):
+            left = np.concatenate([dist[:1], dist[:-1]])
+            right = np.concatenate([dist[1:], dist[-1:]])
+            dist = g[i] + np.minimum(dist, np.minimum(left, right))
+        np.testing.assert_array_equal(np.asarray(out), dist)
+
+    return Workload(
+        name=f"pathfinder.{rows}x{cols}",
+        fn=pathfinder_min_path,
+        make_inputs=make_inputs,
+        flops=4.0 * rows * cols,
+        bytes_moved=4.0 * rows * cols,
+        validate=validate,
+    )
+
+
+register(
+    BenchmarkSpec(
+        name="pathfinder",
+        level=1,
+        dwarf="Dynamic programming",
+        domain=None,
+        cuda_feature="HyperQ",
+        tpu_feature="concurrent instances via vmap (feat_hyperq)",
+        presets=geometric_presets(
+            {"rows": 64, "cols": 1024},
+            scale_keys={"rows": 2.0, "cols": 4.0},
+            round_to=16,
+        ),
+        build=lambda rows, cols: _make(rows, cols),
+    )
+)

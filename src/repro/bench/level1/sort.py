@@ -1,0 +1,68 @@
+"""Level 1: Sort — key-value sort (radix sort in the paper).
+
+TPU adaptation (DESIGN.md §2): radix sort's histogram+scatter inner loop is
+gather/scatter-bound, hostile to the TPU vector unit; the kernel here is a
+**bitonic network of reshape-swap compare-exchanges** (zero gathers, full
+lane utilization) at O(n log² n) — `repro.kernels.bitonic_sort`. The suite
+workload sorts uint keys carrying payload values, validated against
+``jnp.argsort``.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.presets import geometric_presets
+from repro.core.registry import BenchmarkSpec, Workload, register
+from repro.kernels import ops
+
+
+def _make(n: int) -> Workload:
+    def make_inputs(seed: int):
+        key = jax.random.key(seed)
+        kk, kv = jax.random.split(key)
+        keys = jax.random.randint(kk, (n,), 0, 1 << 30, dtype=jnp.int32)
+        vals = jax.random.randint(kv, (n,), 0, 1 << 30, dtype=jnp.int32)
+        return (keys, vals)
+
+    def fn(keys, vals):
+        return ops.sort_kv(keys, vals)
+
+    def validate(out, args):
+        keys, vals = args
+        ko, vo = out
+        ko, vo = np.asarray(ko), np.asarray(vo)
+        assert np.all(np.diff(ko) >= 0), "keys not sorted"
+        # Same multiset of (key, value) pairs.
+        got = np.sort(np.stack([ko, vo]), axis=1)
+        want = np.sort(np.stack([np.asarray(keys), np.asarray(vals)]), axis=1)
+        np.testing.assert_array_equal(got, want)
+
+    log2n = max(1, int(np.ceil(np.log2(n))))
+    return Workload(
+        name=f"sort.n{n}",
+        fn=fn,
+        make_inputs=make_inputs,
+        flops=float(n * log2n * (log2n + 1) / 2),  # compare-exchanges
+        bytes_moved=16.0 * n,
+        validate=validate,
+    )
+
+
+register(
+    BenchmarkSpec(
+        name="sort",
+        level=1,
+        dwarf="Sorting",
+        domain=None,
+        cuda_feature=None,
+        tpu_feature="bitonic reshape-swap network (Pallas)",
+        presets=geometric_presets(
+            {"n": 1 << 12}, scale_keys={"n": 8.0}, round_to=128
+        ),
+        build=lambda n: _make(n),
+    )
+)

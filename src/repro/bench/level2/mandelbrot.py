@@ -1,0 +1,135 @@
+"""Level 2: Mandelbrot — the Dynamic-Parallelism benchmark.
+
+Two implementations, exactly the paper's pair (§V-B):
+
+- ``escape_time``: flat per-pixel iteration (the baseline the paper measures
+  without Dynamic Parallelism) — a vectorized ``while_loop`` over the whole
+  image; every pixel iterates until escape or max_iter.
+- ``mariani_silver``: the adaptive algorithm the paper enables with Dynamic
+  Parallelism. TPU adaptation (DESIGN.md §2): instead of child-kernel
+  launches, the image is tiled; a cheap *border* pass classifies each tile
+  (the Mariani–Silver invariant: if the border of a region lies entirely in
+  the set, the whole region is in the set); interior tiles are filled
+  without iteration and only mixed tiles run the per-pixel loop via
+  ``lax.map`` + ``cond``. The work saved — interior pixels never iterate to
+  max_iter — is the same work Dynamic Parallelism saves on GPU.
+
+Validation: both versions agree exactly.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.presets import geometric_presets
+from repro.core.registry import BenchmarkSpec, Workload, register
+
+
+def _pixel_grid(n: int, center=(-0.6, 0.0), extent=2.6):
+    xs = jnp.linspace(center[0] - extent / 2, center[0] + extent / 2, n)
+    ys = jnp.linspace(center[1] - extent / 2, center[1] + extent / 2, n)
+    return xs[None, :] + 1j * ys[:, None]
+
+
+def _iterate(c: jax.Array, max_iter: int) -> jax.Array:
+    """Escape-time counts for an arbitrary-shape complex block."""
+
+    def cond(state):
+        z, k, n = state
+        return jnp.any(jnp.abs(z) <= 2.0) & (k < max_iter)
+
+    def body(state):
+        z, k, n = state
+        active = jnp.abs(z) <= 2.0
+        z = jnp.where(active, z * z + c, z)
+        n = jnp.where(active, n + 1, n)
+        return z, k + 1, n
+
+    _, _, n = jax.lax.while_loop(
+        cond, body, (jnp.zeros_like(c), jnp.int32(0), jnp.zeros(c.shape, jnp.int32))
+    )
+    return n
+
+
+def escape_time(c: jax.Array, max_iter: int) -> jax.Array:
+    return _iterate(c, max_iter)
+
+
+def mariani_silver(c: jax.Array, max_iter: int, tile: int = 32) -> jax.Array:
+    n = c.shape[0]
+    assert n % tile == 0
+    t = n // tile
+    tiles = c.reshape(t, tile, t, tile).transpose(0, 2, 1, 3).reshape(-1, tile, tile)
+
+    # Border classification: all four edges of a tile.
+    border = jnp.concatenate(
+        [tiles[:, 0, :], tiles[:, -1, :], tiles[:, :, 0], tiles[:, :, -1]], axis=1
+    )
+    border_n = _iterate(border, max_iter)
+    uniform_interior = jnp.all(border_n == max_iter, axis=1)
+
+    def per_tile(args):
+        tc, is_interior = args
+        return jax.lax.cond(
+            is_interior,
+            lambda tc: jnp.full((tile, tile), max_iter, jnp.int32),
+            lambda tc: _iterate(tc, max_iter),
+            tc,
+        )
+
+    out_tiles = jax.lax.map(per_tile, (tiles, uniform_interior))
+    return (
+        out_tiles.reshape(t, t, tile, tile).transpose(0, 2, 1, 3).reshape(n, n)
+    )
+
+
+def _make(n: int, max_iter: int, adaptive: bool) -> Workload:
+    def make_inputs(seed: int):
+        del seed  # the fractal view is fixed; determinism is the point
+        return (_pixel_grid(n),)
+
+    fn = (
+        functools.partial(mariani_silver, max_iter=max_iter)
+        if adaptive
+        else functools.partial(escape_time, max_iter=max_iter)
+    )
+
+    def validate(out, args):
+        import numpy as np
+
+        (c,) = args
+        want = escape_time(c, max_iter)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(want))
+
+    return Workload(
+        name=f"mandelbrot.{'ms' if adaptive else 'flat'}.{n}px.i{max_iter}",
+        fn=fn,
+        make_inputs=make_inputs,
+        flops=float(n * n * max_iter * 10),  # upper bound (flat version)
+        bytes_moved=float(n * n * 12),
+        validate=validate,
+    )
+
+
+for _adaptive in (False, True):
+    register(
+        BenchmarkSpec(
+            name=f"mandelbrot_{'ms' if _adaptive else 'flat'}",
+            level=2,
+            dwarf=None,
+            domain="Numerical analysis",
+            cuda_feature="Dynamic Parallelism" if _adaptive else None,
+            tpu_feature="tile-adaptive refinement (feat_dynamic_parallelism)"
+            if _adaptive
+            else None,
+            presets=geometric_presets(
+                {"n": 128, "max_iter": 64, "adaptive": _adaptive},
+                scale_keys={"n": 2.0, "max_iter": 2.0},
+                round_to=32,
+            ),
+            build=lambda n, max_iter, adaptive: _make(n, max_iter, adaptive),
+        )
+    )

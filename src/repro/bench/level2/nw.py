@@ -1,0 +1,117 @@
+"""Level 2: Needleman-Wunsch — global DNA sequence alignment (dynamic
+programming).
+
+The DP table's (i, j) cell depends on NW/N/W neighbours, so the natural TPU
+schedule is the **anti-diagonal wavefront**: ``lax.scan`` over 2n−1
+diagonals, each diagonal a fully vectorized max over three shifted copies of
+the previous diagonals (GPU blocks synchronize along the same wavefront; on
+TPU the diagonal is one vector op). Scores use the match/mismatch/gap model;
+validation is an O(n²) python DP oracle.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.presets import geometric_presets
+from repro.core.registry import BenchmarkSpec, Workload, register
+
+MATCH, MISMATCH, GAP = 1, -1, -2
+NEG = jnp.int32(-(2**20))
+
+
+def nw_score(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Final alignment score of int sequences a, b (same length n)."""
+    n = a.shape[0]
+
+    # Diagonal d holds cells (i, j) with i + j == d, padded to length n+1.
+    # diag[k] = cell (i=k, j=d-k) for valid k.
+    def cell_score(d, k):
+        i, j = k, d - k
+        return jnp.where((a[jnp.clip(i - 1, 0, n - 1)] == b[jnp.clip(j - 1, 0, n - 1)]), MATCH, MISMATCH)
+
+    ks = jnp.arange(n + 1)
+
+    def step(carry, d):
+        prev2, prev1 = carry  # diagonals d-2 and d-1
+        i = ks
+        j = d - ks
+        valid = (j >= 0) & (j <= n)
+        # neighbours in diagonal coordinates:
+        nw = prev2[jnp.clip(ks - 1, 0, n)]  # (i-1, j-1)
+        up = prev1[jnp.clip(ks - 1, 0, n)]  # (i-1, j)
+        left = prev1[ks]  # (i, j-1)
+        sub = jnp.where(
+            a[jnp.clip(i - 1, 0, n - 1)] == b[jnp.clip(j - 1, 0, n - 1)],
+            MATCH,
+            MISMATCH,
+        )
+        score = jnp.maximum(nw + sub, jnp.maximum(up + GAP, left + GAP))
+        # boundary rows/cols: score(i,0) = i*GAP, score(0,j) = j*GAP
+        score = jnp.where(i == 0, j * GAP, score)
+        score = jnp.where(j == 0, i * GAP, score)
+        score = jnp.where(valid, score, NEG)
+        return (prev1, score), None
+
+    init0 = jnp.full((n + 1,), NEG, jnp.int32).at[0].set(0)  # d=0: (0,0)=0
+    # d=1: (0,1)=GAP, (1,0)=GAP
+    init1 = jnp.full((n + 1,), NEG, jnp.int32).at[0].set(GAP).at[1].set(GAP)
+    (prev2, prev1), _ = jax.lax.scan(step, (init0, init1), jnp.arange(2, 2 * n + 1))
+    return prev1[n]  # cell (n, n)
+
+
+def nw_oracle(a: np.ndarray, b: np.ndarray) -> int:
+    n, m = len(a), len(b)
+    dp = np.zeros((n + 1, m + 1), dtype=np.int64)
+    dp[:, 0] = np.arange(n + 1) * GAP
+    dp[0, :] = np.arange(m + 1) * GAP
+    for i in range(1, n + 1):
+        for j in range(1, m + 1):
+            sub = MATCH if a[i - 1] == b[j - 1] else MISMATCH
+            dp[i, j] = max(dp[i - 1, j - 1] + sub, dp[i - 1, j] + GAP, dp[i, j - 1] + GAP)
+    return int(dp[n, m])
+
+
+def _make(n: int) -> Workload:
+    def make_inputs(seed: int):
+        key = jax.random.key(seed)
+        ka, kb = jax.random.split(key)
+        return (
+            jax.random.randint(ka, (n,), 0, 4, dtype=jnp.int32),
+            jax.random.randint(kb, (n,), 0, 4, dtype=jnp.int32),
+        )
+
+    def validate(out, args):
+        a, b = args
+        if n > 512:
+            return  # oracle is O(n²) python
+        assert int(out) == nw_oracle(np.asarray(a), np.asarray(b)), (
+            int(out),
+            nw_oracle(np.asarray(a), np.asarray(b)),
+        )
+
+    return Workload(
+        name=f"nw.n{n}",
+        fn=nw_score,
+        make_inputs=make_inputs,
+        flops=float(6 * n * n),
+        bytes_moved=float(n * n * 4),
+        validate=validate,
+    )
+
+
+register(
+    BenchmarkSpec(
+        name="nw",
+        level=2,
+        dwarf="Dynamic programming",
+        domain="Bioinformatics",
+        cuda_feature=None,
+        tpu_feature="anti-diagonal wavefront scan",
+        presets=geometric_presets({"n": 128}, scale_keys={"n": 2.0}, round_to=16),
+        build=lambda n: _make(n),
+    )
+)

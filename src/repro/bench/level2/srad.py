@@ -1,0 +1,76 @@
+"""Level 2: SRAD — speckle-reducing anisotropic diffusion (computer vision).
+
+The Cooperative-Groups benchmark (§V-B). The suite workload iterates the
+*fused* two-phase Pallas stencil (`repro.kernels.srad_stencil`); the feature
+comparison fused-vs-split lives in ``benchmarks/feat_coop_groups.py``.
+q0sqr follows Rodinia: speckle statistics of a homogeneous image region.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.presets import geometric_presets
+from repro.core.registry import BenchmarkSpec, Workload, register
+from repro.kernels import ops
+
+
+def q0sqr_of(img: jax.Array) -> float:
+    region = img[: max(8, img.shape[0] // 8), : max(8, img.shape[1] // 8)]
+    mean = jnp.mean(region)
+    var = jnp.var(region)
+    return var / (mean * mean)
+
+
+def srad_iterations(img: jax.Array, iters: int, lam: float, fused: bool) -> jax.Array:
+    q0 = float(0.05)  # Rodinia default speckle scale for synthetic inputs
+
+    def body(_, im):
+        return ops.srad_step(im, lam=lam, q0sqr=q0, fused=fused)
+
+    return jax.lax.fori_loop(0, iters, body, img)
+
+
+def _make(n: int, iters: int, fused: bool = True) -> Workload:
+    def make_inputs(seed: int):
+        key = jax.random.key(seed)
+        # Positive speckled image (exponential of Gaussian, as in Rodinia).
+        return (jnp.exp(0.1 * jax.random.normal(key, (n, n), jnp.float32)),)
+
+    def fn(img):
+        return srad_iterations(img, iters, lam=0.5, fused=fused)
+
+    def validate(out, args):
+        import numpy as np
+
+        (img,) = args
+        o = np.asarray(out)
+        assert np.all(np.isfinite(o)), "SRAD diverged"
+        # Diffusion must reduce speckle variance.
+        assert o.var() <= np.asarray(img).var() * 1.01
+
+    return Workload(
+        name=f"srad.{n}x{n}.i{iters}.{'fused' if fused else 'split'}",
+        fn=fn,
+        make_inputs=make_inputs,
+        flops=float(iters * n * n * 40),
+        bytes_moved=float(iters * n * n * 4 * (2 if fused else 4)),
+        validate=validate,
+    )
+
+
+register(
+    BenchmarkSpec(
+        name="srad",
+        level=2,
+        dwarf="Structured grid",
+        domain="Computer vision",
+        cuda_feature="Cooperative Groups",
+        tpu_feature="fused two-phase stencil kernel (feat_coop_groups)",
+        presets=geometric_presets(
+            {"n": 64, "iters": 4, "fused": True}, scale_keys={"n": 2.0}, round_to=16
+        ),
+        build=lambda n, iters, fused: _make(n, iters, fused),
+    )
+)

@@ -1,0 +1,80 @@
+"""Level 2: Where — relational selection (data analytics, MapReduce dwarf).
+
+The paper's new data-analytics benchmark: map each record to 0/1 under a
+predicate, prefix-sum the flags, and compact matching records to the output.
+The prefix sum is the Pallas scan kernel (`repro.kernels.prefix_scan`); the
+compaction writes via scatter to the scanned offsets — exactly the paper's
+description of the filter. Output is fixed-capacity (records, padded) to
+keep shapes static under jit; the match count is returned alongside.
+
+Validation: equal to the boolean-mask filter.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.presets import geometric_presets
+from repro.core.registry import BenchmarkSpec, Workload, register
+from repro.kernels import ops
+
+
+def where_select(records: jax.Array, lo: float, hi: float):
+    """records (N, F); select rows with lo < records[:, 0] < hi."""
+    n = records.shape[0]
+    flags = ((records[:, 0] > lo) & (records[:, 0] < hi)).astype(jnp.float32)
+    offsets = ops.prefix_scan(flags)  # inclusive scan
+    count = offsets[-1].astype(jnp.int32)
+    dest = (offsets - 1).astype(jnp.int32)  # exclusive position of each match
+    dest = jnp.where(flags > 0, dest, n)  # park non-matches on a scratch row
+    out = jnp.zeros((n + 1, records.shape[1]), records.dtype)
+    out = out.at[dest].set(records)[:n]  # scratch row n sliced away
+    valid = jnp.arange(n)[:, None] < count
+    return jnp.where(valid, out, 0.0), count
+
+
+def _make(n: int, fields: int) -> Workload:
+    def make_inputs(seed: int):
+        key = jax.random.key(seed)
+        return (jax.random.uniform(key, (n, fields), jnp.float32),)
+
+    def fn(records):
+        return where_select(records, 0.25, 0.75)
+
+    def validate(out, args):
+        (records,) = args
+        got, count = np.asarray(out[0]), int(out[1])
+        r = np.asarray(records)
+        mask = (r[:, 0] > 0.25) & (r[:, 0] < 0.75)
+        want = r[mask]
+        assert count == want.shape[0], (count, want.shape)
+        np.testing.assert_allclose(got[:count], want, rtol=1e-6)
+        assert np.all(got[count:] == 0.0)
+
+    return Workload(
+        name=f"where.n{n}.f{fields}",
+        fn=fn,
+        make_inputs=make_inputs,
+        flops=float(3 * n),
+        bytes_moved=float(n * fields * 4 * 2),
+        validate=validate,
+    )
+
+
+register(
+    BenchmarkSpec(
+        name="where",
+        level=2,
+        dwarf="MapReduce",
+        domain="Data Analytics",
+        cuda_feature=None,
+        tpu_feature="prefix-scan compaction (Pallas scan)",
+        presets=geometric_presets(
+            {"n": 1 << 12, "fields": 8}, scale_keys={"n": 8.0}, round_to=128
+        ),
+        build=lambda n, fields: _make(n, fields),
+    )
+)

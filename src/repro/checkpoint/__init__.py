@@ -1,0 +1,4 @@
+# Fault-tolerance substrate: asynchronous, atomic, keep-k checkpointing of
+# (params, optimizer state, data cursor, rng) with exact-resume semantics.
+
+from repro.checkpoint.checkpointer import Checkpointer  # noqa: F401

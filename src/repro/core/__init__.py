@@ -1,0 +1,24 @@
+# The paper's primary contribution — the Mirovia/Altis benchmark-suite
+# SYSTEM: registry (Table I), preset/custom problem sizing, timing harness
+# (CUDA-event analogue), roofline characterization (nvprof analogue),
+# result reporting, the unified suite runner, and the modern-platform
+# feature analogues (HyperQ / Unified Memory / Dynamic Parallelism /
+# Cooperative Groups mapped to TPU idioms).
+
+from repro.core.registry import (  # noqa: F401
+    BenchmarkSpec,
+    Workload,
+    all_benchmarks,
+    get_benchmark,
+    register,
+)
+from repro.core.harness import TimingResult, compile_workload, time_workload  # noqa: F401
+from repro.core.metrics import (  # noqa: F401
+    TPUv5e,
+    RooflineTerms,
+    collective_bytes_from_hlo,
+    roofline_terms,
+    utilization_scale10,
+)
+from repro.core.results import BenchmarkRecord, to_csv_lines, write_report  # noqa: F401
+from repro.core.suite import run_suite  # noqa: F401

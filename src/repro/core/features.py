@@ -1,0 +1,117 @@
+"""Modern-platform feature analogues (paper §IV/§V-B, DESIGN.md §2).
+
+Each CUDA feature the paper studies is mapped to the TPU/JAX idiom that
+serves the same *purpose*, and exposed here as a reusable helper so the
+feature benchmarks (`benchmarks/feat_*.py`) and the suite share one
+implementation:
+
+- HyperQ → ``concurrent_instances``: run N independent instances of a
+  workload in one program via ``vmap`` (fills idle MXU/VPU lanes the way
+  HyperQ fills idle work queues) and ``async_launch``: dispatch N jitted
+  calls without intermediate synchronization (JAX's async runtime overlaps
+  host dispatch with device execution).
+- Unified Memory → ``DemandStager`` / ``Prefetcher``: host-resident arrays
+  staged to device on first use vs ahead-of-use double-buffered prefetch —
+  the `cudaMemAdvise`/`cudaMemPrefetchAsync` study of §V-B.
+- Dynamic Parallelism → ``adaptive_refine``: coarse-phase classification +
+  fine-phase masked iteration (Mariani–Silver structure) as a reusable
+  combinator over ``lax.while_loop``.
+- Cooperative Groups → kernel-fusion toggles live in the SRAD kernel itself
+  (`repro.kernels.srad_stencil`: fused two-phase vs split calls).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "concurrent_instances",
+    "async_launch",
+    "DemandStager",
+    "Prefetcher",
+    "adaptive_refine",
+]
+
+
+def concurrent_instances(fn: Callable[..., Any], n: int) -> Callable[..., Any]:
+    """HyperQ analogue: one program that executes ``n`` independent instances.
+
+    The returned callable takes *stacked* inputs (leading axis ``n``). On GPU
+    the paper launches N kernels on N streams; on TPU a single core runs one
+    program, so concurrency means *occupancy*: vmapping the instances lets
+    XLA batch/interleave them across MXU/VPU lanes.
+    """
+    return jax.vmap(fn)
+
+
+def async_launch(fn: Callable[..., Any], args_list: Sequence[tuple]) -> list[Any]:
+    """Dispatch many independent calls before synchronizing any of them.
+
+    JAX's async dispatch queues device work and returns futures-like arrays;
+    blocking only at the end lets host-side launch overlap device execution —
+    the stream-level half of the HyperQ story.
+    """
+    outs = [fn(*args) for args in args_list]
+    return jax.block_until_ready(outs)
+
+
+@dataclasses.dataclass
+class DemandStager:
+    """Unified-memory analogue: host arrays staged to device on first touch."""
+
+    _cache: dict[int, jax.Array] = dataclasses.field(default_factory=dict)
+
+    def get(self, host_array) -> jax.Array:
+        key = id(host_array)
+        if key not in self._cache:
+            self._cache[key] = jax.device_put(jnp.asarray(host_array))
+        return self._cache[key]
+
+
+class Prefetcher:
+    """`cudaMemPrefetchAsync` analogue: overlap next-transfer with compute.
+
+    ``prefetch`` starts an async host→device transfer; ``get`` blocks only if
+    the transfer has not completed. JAX's async dispatch makes device_put
+    non-blocking, so interleaving prefetch(i+1) with compute(i) overlaps the
+    PCI/host link with device execution.
+    """
+
+    def __init__(self) -> None:
+        self._pending: dict[Any, jax.Array] = {}
+
+    def prefetch(self, key, host_array) -> None:
+        self._pending[key] = jax.device_put(jnp.asarray(host_array))
+
+    def get(self, key) -> jax.Array:
+        return self._pending.pop(key)
+
+
+def adaptive_refine(
+    coarse_fn: Callable[..., jax.Array],
+    fine_fn: Callable[..., jax.Array],
+    needs_refine: Callable[[jax.Array], jax.Array],
+) -> Callable[..., jax.Array]:
+    """Dynamic-parallelism analogue (Mariani–Silver structure).
+
+    ``coarse_fn(x)`` produces a cheap approximation; ``needs_refine(out)``
+    marks elements requiring fine work; ``fine_fn(x)`` computes the exact
+    value. The combinator evaluates fine work only where needed via
+    ``jnp.where`` masking — on TPU, skipped lanes cost vector-issue slots but
+    no memory traffic, which is the realizable fraction of the GPU win (the
+    paper's child-kernel launches have no TPU equivalent; DESIGN.md §2).
+    """
+
+    def run(x: jax.Array) -> jax.Array:
+        coarse = coarse_fn(x)
+        mask = needs_refine(coarse)
+        # fine_fn must be total (defined everywhere) — masking selects, it
+        # does not guard evaluation.
+        fine = fine_fn(x)
+        return jnp.where(mask, fine, coarse)
+
+    return run

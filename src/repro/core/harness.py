@@ -1,0 +1,167 @@
+"""Timing + compilation harness — the CUDA Event API analogue.
+
+The paper replaces Rodinia's system-time measurement with CUDA events for
+accurate kernel timing. JAX dispatch is asynchronous, so the analogue is:
+
+- compile first (``jax.jit(fn).lower(...).compile()``) so timing never
+  includes tracing/compilation,
+- synchronize with ``jax.block_until_ready`` around a monotonic clock,
+- warm up before measuring (spreads one-time allocation/transfer cost),
+- report per-call microseconds with spread, plus the compiled artifact's
+  static cost/memory analysis for the roofline pipeline.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import statistics
+import time
+from typing import Any, Callable, Sequence
+
+import jax
+
+from repro.core.metrics import (
+    RooflineTerms,
+    collective_bytes_from_hlo,
+    roofline_terms,
+)
+from repro.core.registry import Workload
+
+__all__ = ["TimingResult", "CompiledInfo", "time_workload", "compile_workload", "time_fn"]
+
+
+@dataclasses.dataclass(frozen=True)
+class TimingResult:
+    name: str
+    us_per_call: float
+    us_stdev: float
+    iters: int
+    achieved_gflops: float  # from the workload's analytic FLOP count
+    achieved_gbps: float  # from the workload's analytic byte count
+
+    def csv(self) -> str:
+        return (
+            f"{self.name},{self.us_per_call:.2f},"
+            f"gflops={self.achieved_gflops:.2f};gbps={self.achieved_gbps:.2f}"
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class CompiledInfo:
+    name: str
+    cost: dict[str, float]
+    memory: dict[str, float]
+    roofline: RooflineTerms
+    hlo_collectives_bytes: float
+
+
+def time_fn(
+    fn: Callable[..., Any],
+    args: Sequence[Any],
+    *,
+    iters: int = 10,
+    warmup: int = 3,
+) -> tuple[float, float]:
+    """Return (mean_us, stdev_us) for an already-compiled callable."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    samples = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        samples.append((time.perf_counter() - t0) * 1e6)
+    mean = statistics.fmean(samples)
+    stdev = statistics.stdev(samples) if len(samples) > 1 else 0.0
+    return mean, stdev
+
+
+def time_workload(
+    workload: Workload,
+    *,
+    iters: int = 10,
+    warmup: int = 3,
+    seed: int = 0,
+    backward: bool = False,
+) -> TimingResult:
+    """Compile + validate + time one workload (forward or backward pass)."""
+    args = workload.make_inputs(seed)
+    fn = workload.fn_bwd if backward else workload.fn
+    if backward and fn is None:
+        raise ValueError(f"workload {workload.name!r} has no backward pass")
+    # Host-transfer benchmarks (BusSpeed*) measure the un-jitted staging path.
+    jitted = fn if workload.meta.get("no_jit") else jax.jit(fn)
+    out = jax.block_until_ready(jitted(*args))
+    if not backward and workload.validate is not None:
+        workload.validate(out, args)
+    mean, stdev = time_fn(jitted, args, iters=iters, warmup=warmup)
+    flops = workload.flops_bwd if backward else workload.flops
+    name = workload.name + (".bwd" if backward else "")
+    sec = mean / 1e6
+    return TimingResult(
+        name=name,
+        us_per_call=mean,
+        us_stdev=stdev,
+        iters=iters,
+        achieved_gflops=(flops / sec / 1e9) if (flops and sec > 0) else 0.0,
+        achieved_gbps=(workload.bytes_moved / sec / 1e9)
+        if (workload.bytes_moved and sec > 0)
+        else 0.0,
+    )
+
+
+def _memory_analysis_dict(compiled: Any) -> dict[str, float]:
+    ma = compiled.memory_analysis()
+    out: dict[str, float] = {}
+    for key in (
+        "argument_size_in_bytes",
+        "output_size_in_bytes",
+        "temp_size_in_bytes",
+        "generated_code_size_in_bytes",
+        "alias_size_in_bytes",
+        "host_argument_size_in_bytes",
+        "host_output_size_in_bytes",
+        "host_temp_size_in_bytes",
+    ):
+        if hasattr(ma, key):
+            out[key] = float(getattr(ma, key))
+    return out
+
+
+def compile_workload(
+    workload: Workload,
+    *,
+    seed: int = 0,
+    backward: bool = False,
+    abstract_args: Sequence[Any] | None = None,
+) -> CompiledInfo:
+    """Lower + compile, returning static cost/memory/roofline analysis.
+
+    ``abstract_args`` lets callers pass ShapeDtypeStructs (dry-run path: no
+    allocation); otherwise concrete inputs are built from ``seed``.
+    """
+    args = abstract_args if abstract_args is not None else workload.make_inputs(seed)
+    fn = workload.fn_bwd if backward else workload.fn
+    if backward and fn is None:
+        raise ValueError(f"workload {workload.name!r} has no backward pass")
+    if workload.meta.get("no_jit"):
+        # Host-transfer workloads have no device program to analyse.
+        from repro.core.metrics import roofline_terms as _rt
+
+        return CompiledInfo(
+            name=workload.name + (".bwd" if backward else ""),
+            cost={},
+            memory={},
+            roofline=_rt({}, collective_bytes=0.0),
+            hlo_collectives_bytes=0.0,
+        )
+    lowered = jax.jit(fn).lower(*args)
+    compiled = lowered.compile()
+    cost = dict(compiled.cost_analysis() or {})
+    coll = collective_bytes_from_hlo(compiled.as_text())
+    return CompiledInfo(
+        name=workload.name + (".bwd" if backward else ""),
+        cost={k: float(v) for k, v in cost.items() if isinstance(v, (int, float))},
+        memory=_memory_analysis_dict(compiled),
+        roofline=roofline_terms(cost, collective_bytes=coll),
+        hlo_collectives_bytes=coll,
+    )

@@ -1,0 +1,127 @@
+"""Benchmark registry — the suite's Table I as a first-class data structure.
+
+Mirovia/Altis organizes benchmarks into *levels*:
+
+- level 0: device microbenchmarks (bus speed, memory bandwidth, MaxFlops),
+- level 1: basic parallel algorithms (GUPS, BFS, GEMM, Pathfinder, Sort),
+- level 2: real application kernels (CFD, DWT2D, KMeans, LavaMD, Mandelbrot,
+  NW, ParticleFilter, SRAD, Where) **plus the DNN section** (activation,
+  pooling, batchnorm, connected, convolution, dropout, rnn, softmax, lrn),
+
+with each benchmark tagged by Berkeley dwarf, application domain, and — where
+applicable — the modern-platform feature it exercises. This module stores all
+of that metadata and the factory that instantiates a benchmark at a given
+problem size, so the suite runner, the preset system, and the report
+generators all consume one source of truth.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Mapping, Sequence
+
+__all__ = [
+    "Workload",
+    "BenchmarkSpec",
+    "register",
+    "get_benchmark",
+    "all_benchmarks",
+    "benchmarks_by_level",
+    "DNN_DOMAIN",
+]
+
+DNN_DOMAIN = "Deep Learning"
+
+
+@dataclasses.dataclass
+class Workload:
+    """A benchmark instantiated at a concrete problem size.
+
+    ``fn`` is a pure JAX function (jit-able); ``make_inputs`` builds the
+    concrete input pytree deterministically from a seed. ``flops`` /
+    ``bytes_moved`` are *analytic* estimates used to report achieved
+    throughput (the compiled HLO numbers come from the harness separately and
+    the two are cross-checked in tests). ``validate`` optionally checks
+    outputs for correctness (the suite runs it once, outside timing).
+    """
+
+    name: str
+    fn: Callable[..., Any]
+    make_inputs: Callable[[int], tuple]  # seed -> positional args for fn
+    flops: float = 0.0
+    bytes_moved: float = 0.0
+    validate: Callable[[Any, tuple], None] | None = None
+    # Differentiable workloads (the DNN section) also expose a backward fn.
+    fn_bwd: Callable[..., Any] | None = None
+    flops_bwd: float = 0.0
+    meta: dict = dataclasses.field(default_factory=dict)
+
+
+@dataclasses.dataclass(frozen=True)
+class BenchmarkSpec:
+    """One Table-I row: identity + metadata + preset sizes + factory."""
+
+    name: str
+    level: int  # 0, 1, or 2 (DNN benchmarks are level 2, domain "Deep Learning")
+    dwarf: str | None
+    domain: str | None
+    cuda_feature: str | None  # the paper's "New CUDA Feature" column
+    tpu_feature: str | None  # our TPU-idiomatic analogue (DESIGN.md §2)
+    presets: Mapping[int, Mapping[str, Any]]  # preset id (0..4) -> size kwargs
+    build: Callable[..., Workload]  # build(**size_kwargs) -> Workload
+    tags: tuple[str, ...] = ()
+
+    def build_preset(self, preset: int, **overrides: Any) -> Workload:
+        """Rodinia-style override on top of SHOC-style presets (§III-B)."""
+        if preset not in self.presets:
+            raise KeyError(
+                f"benchmark {self.name!r} has presets {sorted(self.presets)}, "
+                f"not {preset}"
+            )
+        kwargs = dict(self.presets[preset])
+        unknown = set(overrides) - set(kwargs)
+        if unknown:
+            raise TypeError(
+                f"benchmark {self.name!r} does not take size parameters {sorted(unknown)}; "
+                f"valid: {sorted(kwargs)}"
+            )
+        kwargs.update(overrides)
+        return self.build(**kwargs)
+
+
+_REGISTRY: dict[str, BenchmarkSpec] = {}
+
+
+def register(spec: BenchmarkSpec) -> BenchmarkSpec:
+    if spec.name in _REGISTRY:
+        raise ValueError(f"duplicate benchmark registration: {spec.name!r}")
+    if spec.level not in (0, 1, 2):
+        raise ValueError(f"benchmark {spec.name!r}: level must be 0/1/2, got {spec.level}")
+    if not spec.presets:
+        raise ValueError(f"benchmark {spec.name!r}: at least one preset size required")
+    _REGISTRY[spec.name] = spec
+    return spec
+
+
+def _ensure_loaded() -> None:
+    # Benchmark modules self-register on import; importing the bench package
+    # pulls in every level. Kept lazy so `import repro.core` stays light.
+    import repro.bench  # noqa: F401
+
+
+def get_benchmark(name: str) -> BenchmarkSpec:
+    _ensure_loaded()
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        known = ", ".join(sorted(_REGISTRY))
+        raise KeyError(f"unknown benchmark {name!r}; known: {known}") from None
+
+
+def all_benchmarks() -> Sequence[BenchmarkSpec]:
+    _ensure_loaded()
+    return sorted(_REGISTRY.values(), key=lambda s: (s.level, s.name))
+
+
+def benchmarks_by_level(level: int) -> Sequence[BenchmarkSpec]:
+    return [s for s in all_benchmarks() if s.level == level]

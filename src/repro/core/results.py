@@ -1,0 +1,80 @@
+"""Result records and reports for the suite runner and benchmark drivers."""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Iterable, Sequence
+
+from repro.core.harness import CompiledInfo, TimingResult
+from repro.core.metrics import utilization_scale10
+
+__all__ = ["BenchmarkRecord", "to_csv_lines", "write_report", "load_records"]
+
+
+@dataclasses.dataclass
+class BenchmarkRecord:
+    """One row of suite output: timing + static characterization."""
+
+    name: str
+    level: int
+    dwarf: str | None
+    domain: str | None
+    preset: int
+    us_per_call: float
+    achieved_gflops: float
+    achieved_gbps: float
+    compute_util10: int  # paper-style 0..10 bar (roofline fraction of compute)
+    memory_util10: int
+    dominant: str
+    derived: str = ""
+
+    @classmethod
+    def from_measurement(
+        cls,
+        spec,
+        preset: int,
+        timing: TimingResult,
+        compiled: CompiledInfo,
+    ) -> "BenchmarkRecord":
+        r = compiled.roofline
+        bound = r.bound_s if r.bound_s > 0 else 1.0
+        return cls(
+            name=timing.name,
+            level=spec.level,
+            dwarf=spec.dwarf,
+            domain=spec.domain,
+            preset=preset,
+            us_per_call=timing.us_per_call,
+            achieved_gflops=timing.achieved_gflops,
+            achieved_gbps=timing.achieved_gbps,
+            compute_util10=utilization_scale10(r.compute_s / bound),
+            memory_util10=utilization_scale10(r.memory_s / bound),
+            dominant=r.dominant,
+            derived=(
+                f"flops={r.flops:.3e};bytes={r.hbm_bytes:.3e};"
+                f"coll={r.collective_bytes:.3e}"
+            ),
+        )
+
+    def csv(self) -> str:
+        return f"{self.name},{self.us_per_call:.2f},{self.derived}"
+
+
+def to_csv_lines(records: Iterable[BenchmarkRecord]) -> list[str]:
+    return ["name,us_per_call,derived"] + [r.csv() for r in records]
+
+
+def write_report(records: Sequence[BenchmarkRecord], path: str) -> None:
+    """JSON report, one object per record (the artifact EXPERIMENTS.md reads)."""
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump([dataclasses.asdict(r) for r in records], f, indent=1, sort_keys=True)
+    os.replace(tmp, path)
+
+
+def load_records(path: str) -> list[BenchmarkRecord]:
+    with open(path) as f:
+        return [BenchmarkRecord(**d) for d in json.load(f)]

@@ -1,0 +1,83 @@
+"""The unified suite runner — SHOC-style driver over the whole registry.
+
+``run_suite`` is what `examples/run_suite.py` and `python -m repro.core.suite`
+invoke: select benchmarks (by level / name), pick a preset (or per-benchmark
+size overrides), then for each benchmark time the forward (and backward where
+defined) pass and collect the static roofline characterization. Output is the
+paper's Fig.-5-style table plus a machine-readable JSON report.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+from typing import Sequence
+
+from repro.core.harness import compile_workload, time_workload
+from repro.core.registry import BenchmarkSpec, all_benchmarks
+from repro.core.results import BenchmarkRecord, to_csv_lines, write_report
+
+__all__ = ["run_suite", "main"]
+
+
+def run_suite(
+    *,
+    levels: Sequence[int] = (0, 1, 2),
+    names: Sequence[str] | None = None,
+    preset: int = 0,
+    iters: int = 5,
+    warmup: int = 2,
+    include_backward: bool = True,
+    report_path: str | None = None,
+    verbose: bool = True,
+) -> list[BenchmarkRecord]:
+    records: list[BenchmarkRecord] = []
+    selected: list[BenchmarkSpec] = [
+        s
+        for s in all_benchmarks()
+        if s.level in levels and (names is None or s.name in names)
+    ]
+    if not selected:
+        raise ValueError(f"no benchmarks match levels={levels} names={names}")
+    for spec in selected:
+        p = preset if preset in spec.presets else min(spec.presets)
+        workload = spec.build_preset(p)
+        passes = [False] + ([True] if include_backward and workload.fn_bwd else [])
+        for backward in passes:
+            timing = time_workload(workload, iters=iters, warmup=warmup, backward=backward)
+            compiled = compile_workload(workload, backward=backward)
+            rec = BenchmarkRecord.from_measurement(spec, p, timing, compiled)
+            records.append(rec)
+            if verbose:
+                print(rec.csv(), flush=True)
+    if report_path:
+        write_report(records, report_path)
+    return records
+
+
+def main(argv: Sequence[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description="Run the Mirovia/Altis suite")
+    ap.add_argument("--levels", type=int, nargs="*", default=[0, 1, 2])
+    ap.add_argument("--names", type=str, nargs="*", default=None)
+    ap.add_argument("--preset", type=int, default=0)
+    ap.add_argument("--iters", type=int, default=5)
+    ap.add_argument("--warmup", type=int, default=2)
+    ap.add_argument("--no-backward", action="store_true")
+    ap.add_argument("--report", type=str, default=None)
+    args = ap.parse_args(argv)
+    records = run_suite(
+        levels=args.levels,
+        names=args.names,
+        preset=args.preset,
+        iters=args.iters,
+        warmup=args.warmup,
+        include_backward=not args.no_backward,
+        report_path=args.report,
+    )
+    for line in to_csv_lines(records):
+        print(line)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,7 @@
+# Data substrate: deterministic stateless synthetic token streams (exactly
+# resumable from a step index — the checkpoint stores only the cursor) and a
+# double-buffered host→device prefetch pipeline (the Unified-Memory
+# prefetch analogue at the training-loop level).
+
+from repro.data.synthetic import SyntheticLM, SyntheticEmbeds  # noqa: F401
+from repro.data.pipeline import Prefetch  # noqa: F401

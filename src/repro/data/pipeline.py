@@ -1,0 +1,66 @@
+"""Host→device prefetch pipeline — the training-loop Unified-Memory analogue.
+
+A background thread materializes batch ``step+depth`` while the device runs
+step ``step``; ``jax.device_put`` is asynchronous, so transfer overlaps
+compute exactly like ``cudaMemPrefetchAsync`` overlaps kernels (§V-B). With
+a mesh, batches are placed sharded (batch axis over the data axes) so no
+device ever holds the global batch.
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Callable, Iterator
+
+import jax
+
+__all__ = ["Prefetch"]
+
+
+class Prefetch:
+    def __init__(
+        self,
+        batch_at: Callable[[int], dict],
+        *,
+        start_step: int = 0,
+        depth: int = 2,
+        sharding=None,
+    ):
+        self._batch_at = batch_at
+        self._sharding = sharding
+        self._q: queue.Queue = queue.Queue(maxsize=depth)
+        self._stop = threading.Event()
+        self._step = start_step
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread.start()
+
+    def _worker(self) -> None:
+        step = self._step
+        while not self._stop.is_set():
+            batch = self._batch_at(step)
+            if self._sharding is not None:
+                batch = jax.device_put(batch, self._sharding)
+            else:
+                batch = jax.device_put(batch)
+            # Block until the consumer drains — backpressure caps host memory.
+            while not self._stop.is_set():
+                try:
+                    self._q.put((step, batch), timeout=0.1)
+                    break
+                except queue.Full:
+                    continue
+            step += 1
+
+    def __iter__(self) -> Iterator[tuple[int, dict]]:
+        while True:
+            yield self._q.get()
+
+    def close(self) -> None:
+        self._stop.set()
+        try:
+            while True:
+                self._q.get_nowait()
+        except queue.Empty:
+            pass
+        self._thread.join(timeout=2)

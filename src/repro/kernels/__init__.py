@@ -1,0 +1,9 @@
+# Pallas TPU kernels for the compute hot-spots the paper benchmarks:
+# GEMM/MaxFlops (matmul), attention (flash_attention — also the model zoo's
+# training-time attention on TPU), DNN softmax/LRN/avgpool, the SRAD stencil
+# (cooperative-groups analogue: fused vs split), prefix scan (Where), and
+# bitonic key-value sort (Sort). Each <name>.py is a pl.pallas_call with
+# explicit BlockSpec VMEM tiling; ref.py holds the pure-jnp oracles; ops.py
+# is the public dispatch layer (pallas-on-TPU / interpret / oracle).
+
+from repro.kernels import ops, ref  # noqa: F401

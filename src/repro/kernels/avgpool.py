@@ -1,0 +1,53 @@
+"""Average-pooling kernel (DNN Pooling benchmark, non-overlapping window).
+
+The paper benchmarks cuDNN's average pool; its common configuration (and the
+one the paper describes) is stride == kernel size. On TPU that case is a pure
+reshape-reduce in VMEM — no halo exchange — so one kernel invocation handles
+a (channels-block × full spatial extent) tile. Overlapping windows fall back
+to ``lax.reduce_window`` in ops.py (documented).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["avgpool_pallas"]
+
+
+def _avgpool_kernel(x_ref, o_ref, *, ksize: int):
+    _, bc, h, w = x_ref.shape
+    x = x_ref[0].astype(jnp.float32)  # (bc, H, W)
+    pooled = x.reshape(bc, h // ksize, ksize, w // ksize, ksize).mean(axis=(2, 4))
+    o_ref[0] = pooled.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("ksize", "block_c", "interpret"))
+def avgpool_pallas(
+    x: jax.Array,  # (N, C, H, W)
+    *,
+    ksize: int = 2,
+    block_c: int = 8,
+    interpret: bool = False,
+) -> jax.Array:
+    N, C, H, W = x.shape
+    assert H % ksize == 0 and W % ksize == 0, (H, W, ksize)
+    bc = min(block_c, C)
+    pc = (-C) % bc
+    if pc:
+        x = jnp.pad(x, ((0, 0), (0, pc), (0, 0), (0, 0)))
+    Cp = x.shape[1]
+    out = pl.pallas_call(
+        functools.partial(_avgpool_kernel, ksize=ksize),
+        grid=(N, Cp // bc),
+        in_specs=[pl.BlockSpec((1, bc, H, W), lambda n, c: (n, c, 0, 0))],
+        out_specs=pl.BlockSpec(
+            (1, bc, H // ksize, W // ksize), lambda n, c: (n, c, 0, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct((N, Cp, H // ksize, W // ksize), x.dtype),
+        interpret=interpret,
+    )(x)
+    return out[:, :C]

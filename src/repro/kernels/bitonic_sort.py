@@ -1,0 +1,77 @@
+"""In-VMEM bitonic key-value sort kernel (the Sort benchmark).
+
+TPU adaptation of the paper's radix sort (Satish et al.): radix sort's
+per-digit histogram + scatter is gather/scatter-heavy, which the TPU's
+vector unit punishes. A bitonic network is branch-free and expressible with
+**reshape-swap compare-exchange** — partner elements at XOR-distance ``j``
+are adjacent blocks of size ``j`` after reshaping to (n/2j, 2, j), so every
+stage is pure vector min/max/select with zero gathers. O(n log² n) work
+trades for full lane utilization; rows are sorted independently (grid over
+row tiles), and the ops.py wrapper merges multi-block arrays.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["bitonic_sort_pallas"]
+
+
+def _stage(keys, vals, j: int, dir_up_vec):
+    """One compare-exchange stage at XOR distance j (vector-only)."""
+    n = keys.shape[-1]
+    # Partner at idx ^ j == swap adjacent j-blocks.
+    kp = keys.reshape(-1, 2, j)[:, ::-1, :].reshape(n)
+    vp = vals.reshape(-1, 2, j)[:, ::-1, :].reshape(n)
+    idx = jax.lax.iota(jnp.int32, n)
+    is_low = (idx & j) == 0  # this element is the smaller index of its pair
+    # Ascending region: low index keeps min. Descending: low keeps max.
+    # Strict comparisons per side — on equal keys BOTH sides keep their own
+    # element (otherwise one (key, value) pair is duplicated and its partner
+    # dropped; caught by the hypothesis permutation property).
+    take_min = jnp.logical_xor(is_low, ~dir_up_vec)
+    swap = jnp.where(take_min, keys > kp, keys < kp)
+    keys_new = jnp.where(swap, kp, keys)
+    vals_new = jnp.where(swap, vp, vals)
+    return keys_new, vals_new
+
+
+def _bitonic_kernel(k_ref, v_ref, ko_ref, vo_ref, *, n: int):
+    keys = k_ref[0]
+    vals = v_ref[0]
+    idx = jax.lax.iota(jnp.int32, n)
+    k = 2
+    while k <= n:
+        dir_up_vec = (idx & k) == 0  # ascending iff bit k of index is 0
+        j = k // 2
+        while j >= 1:
+            keys, vals = _stage(keys, vals, j, dir_up_vec)
+            j //= 2
+        k *= 2
+    ko_ref[0] = keys
+    vo_ref[0] = vals
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def bitonic_sort_pallas(
+    keys: jax.Array,  # (N,) — N padded to a power of two by the wrapper
+    values: jax.Array,  # (N,)
+    *,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    (N,) = keys.shape
+    assert N & (N - 1) == 0, f"bitonic sort needs a power-of-two length, got {N}"
+    assert values.shape == (N,)
+    ko, vo = pl.pallas_call(
+        functools.partial(_bitonic_kernel, n=N),
+        out_shape=(
+            jax.ShapeDtypeStruct((1, N), keys.dtype),
+            jax.ShapeDtypeStruct((1, N), values.dtype),
+        ),
+        interpret=interpret,
+    )(keys[None], values[None])
+    return ko[0], vo[0]

@@ -1,0 +1,154 @@
+"""Flash (online-softmax) attention kernel with GQA + causal + sliding window.
+
+TPU adaptation notes (DESIGN.md §2):
+
+- GQA is expressed through the **BlockSpec index map** — the kv block for
+  query head ``h`` is head ``h // group``; kv heads are never materialized
+  per-query-head in HBM (the wrapper-level ``jnp.repeat`` of the oracle is
+  exactly what this avoids).
+- The online-softmax running (m, l, acc) state lives in VMEM registers inside
+  a ``fori_loop`` over key blocks; the loop *trip count is dynamic* per query
+  block: causal masking bounds the top, sliding-window masking bounds the
+  bottom, so SWA decode does O(window) work per token — this is what makes
+  ``long_500k`` sub-quadratic for mixtral-style archs.
+- Queries occupy the last ``t_valid`` positions of the ``s_valid``-long key
+  timeline (offset = s_valid - t_valid), covering prefill and cached decode.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["flash_attention_pallas"]
+
+_NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref,  # (1, 1, bq, D)
+    k_ref,  # (1, 1, Sp, D)
+    v_ref,  # (1, 1, Sp, D)
+    o_ref,  # (1, 1, bq, D)
+    *,
+    block_k: int,
+    s_valid: int,
+    t_valid: int,
+    causal: bool,
+    window: int | None,
+    scale: float,
+    num_k_blocks: int,
+):
+    bq = q_ref.shape[2]
+    d = q_ref.shape[3]
+    qi = pl.program_id(2)
+    offset = s_valid - t_valid  # absolute position of query row 0
+    q_pos = offset + qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, 1), 0)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale  # (bq, D)
+
+    # Dynamic trip bounds: causal upper bound, sliding-window lower bound.
+    if causal:
+        last_q = offset + qi * bq + bq - 1
+        hi = jnp.minimum((last_q // block_k) + 1, num_k_blocks)
+    else:
+        hi = num_k_blocks
+    if window is not None:
+        first_q = offset + qi * bq
+        lo = jnp.maximum((first_q - window + 1) // block_k, 0)
+    else:
+        lo = 0
+
+    def body(j, carry):
+        m, l, acc = carry
+        k = k_ref[0, 0, pl.dslice(j * block_k, block_k), :].astype(jnp.float32)
+        v = v_ref[0, 0, pl.dslice(j * block_k, block_k), :].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )  # (bq, bk)
+        k_pos = j * block_k + jax.lax.broadcasted_iota(jnp.int32, (1, block_k), 1)
+        mask = k_pos < s_valid
+        if causal:
+            mask &= k_pos <= q_pos
+        if window is not None:
+            mask &= k_pos > q_pos - window
+        s = jnp.where(mask, s, _NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        p = jnp.where(mask, p, 0.0)
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1, keepdims=True)
+        acc_new = acc * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        return m_new, l_new, acc_new
+
+    init = (
+        jnp.full((bq, 1), _NEG_INF, jnp.float32),
+        jnp.zeros((bq, 1), jnp.float32),
+        jnp.zeros((bq, d), jnp.float32),
+    )
+    m, l, acc = jax.lax.fori_loop(lo, hi, body, init)
+    out = acc / jnp.maximum(l, 1e-30)
+    o_ref[0, 0] = out.astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "scale", "block_q", "block_k", "interpret"),
+)
+def flash_attention_pallas(
+    q: jax.Array,  # (B, Hq, T, D)
+    k: jax.Array,  # (B, Hkv, S, D)
+    v: jax.Array,  # (B, Hkv, S, D)
+    *,
+    causal: bool = False,
+    window: int | None = None,
+    scale: float | None = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    B, Hq, T, D = q.shape
+    _, Hkv, S, _ = k.shape
+    assert Hq % Hkv == 0, (Hq, Hkv)
+    group = Hq // Hkv
+    if scale is None:
+        scale = float(D) ** -0.5
+
+    bq = min(block_q, T)
+    bk = min(block_k, S)
+    pt, ps = (-T) % bq, (-S) % bk
+    if pt:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pt), (0, 0)))
+    if ps:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, ps), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, ps), (0, 0)))
+    Tp, Sp = T + pt, S + ps
+
+    kernel = functools.partial(
+        _flash_kernel,
+        block_k=bk,
+        s_valid=S,
+        t_valid=T,
+        causal=causal,
+        window=window,
+        scale=scale,
+        num_k_blocks=Sp // bk,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, Hq, Tp // bq),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, D), lambda b, h, i: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, Sp, D), lambda b, h, i, g=group: (b, h // g, 0, 0)),
+            pl.BlockSpec((1, 1, Sp, D), lambda b, h, i, g=group: (b, h // g, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, D), lambda b, h, i: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hq, Tp, D), q.dtype),
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :, :T]

@@ -1,0 +1,66 @@
+"""Local Response Normalization kernel (paper eq. 3, AlexNet-style).
+
+TPU adaptation: the GPU implementation walks the channel window per thread;
+here the cross-channel windowed sum-of-squares is a **banded-matrix matmul on
+the MXU** — ``win = Band @ sq`` where ``Band[i, j] = 1`` iff ``|i - j| <=
+size // 2``. Channels are small (≤ ~2k), so the band matrix lives in VMEM and
+the windowed reduction becomes dense systolic work instead of a gather loop —
+a textbook case of rethinking a CUDA neighbourhood loop for systolic compute.
+Spatial positions are tiled over the grid.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["lrn_pallas"]
+
+
+def _lrn_kernel(x_ref, band_ref, o_ref, *, alpha: float, beta: float, k: float):
+    x = x_ref[0].astype(jnp.float32)  # (C, bs)
+    band = band_ref[...].astype(jnp.float32)  # (C, C)
+    win = jnp.dot(band, x * x, preferred_element_type=jnp.float32)
+    denom = jnp.exp(beta * jnp.log(k + alpha * win))
+    o_ref[0] = (x / denom).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("size", "alpha", "beta", "k", "block_s", "interpret")
+)
+def lrn_pallas(
+    x: jax.Array,  # (N, C, H, W)
+    *,
+    size: int = 5,
+    alpha: float = 1e-4,
+    beta: float = 0.75,
+    k: float = 2.0,
+    block_s: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    N, C, H, W = x.shape
+    S = H * W
+    x2 = x.reshape(N, C, S)
+    bs = min(block_s, S)
+    ps = (-S) % bs
+    if ps:
+        x2 = jnp.pad(x2, ((0, 0), (0, 0), (0, ps)))
+    Sp = x2.shape[-1]
+    half = size // 2
+    ch = jnp.arange(C)
+    band = (jnp.abs(ch[:, None] - ch[None, :]) <= half).astype(x.dtype)
+    out = pl.pallas_call(
+        functools.partial(_lrn_kernel, alpha=alpha, beta=beta, k=k),
+        grid=(N, Sp // bs),
+        in_specs=[
+            pl.BlockSpec((1, C, bs), lambda n, s: (n, 0, s)),
+            pl.BlockSpec((C, C), lambda n, s: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, C, bs), lambda n, s: (n, 0, s)),
+        out_shape=jax.ShapeDtypeStruct((N, C, Sp), x.dtype),
+        interpret=interpret,
+    )(x2, band)
+    return out[:, :, :S].reshape(N, C, H, W)

@@ -1,0 +1,144 @@
+"""Public jit'd entry points for the kernel layer.
+
+Each op dispatches between the Pallas TPU kernel and the pure-jnp oracle:
+
+- on TPU backends the Pallas kernel runs compiled,
+- on CPU (this container) the kernel runs in ``interpret=True`` mode when
+  invoked directly (tests/benchmarks), while *model/dry-run* code paths use
+  the jnp reference implementation so XLA:CPU can lower the 512-device SPMD
+  programs (Pallas interpret inside a 512-way pjit is neither representative
+  nor compilable in reasonable time — DESIGN.md §8).
+
+``mode`` overrides: "pallas" forces the kernel (interpret on non-TPU),
+"ref" forces the oracle, "auto" picks pallas-on-TPU / ref-otherwise.
+"""
+
+from __future__ import annotations
+
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as _ref
+from repro.kernels.avgpool import avgpool_pallas
+from repro.kernels.bitonic_sort import bitonic_sort_pallas
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.lrn import lrn_pallas
+from repro.kernels.matmul import matmul_pallas
+from repro.kernels.prefix_scan import prefix_scan_pallas
+from repro.kernels.softmax import softmax_pallas
+from repro.kernels.srad_stencil import srad_step_fused, srad_step_split
+
+__all__ = [
+    "matmul",
+    "attention",
+    "softmax",
+    "lrn",
+    "avgpool",
+    "srad_step",
+    "prefix_scan",
+    "sort_kv",
+    "on_tpu",
+]
+
+Mode = Literal["auto", "pallas", "ref"]
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _use_pallas(mode: Mode) -> tuple[bool, bool]:
+    """-> (use_pallas, interpret)."""
+    if mode == "ref":
+        return False, False
+    if mode == "pallas":
+        return True, not on_tpu()
+    return on_tpu(), False
+
+
+def matmul(a, b, *, mode: Mode = "auto", **blocks):
+    use, interp = _use_pallas(mode)
+    if use:
+        return matmul_pallas(a, b, interpret=interp, **blocks)
+    return _ref.matmul_ref(a, b)
+
+
+def attention(
+    q,
+    k,
+    v,
+    *,
+    causal: bool = False,
+    window: int | None = None,
+    scale: float | None = None,
+    mode: Mode = "auto",
+    **blocks,
+):
+    use, interp = _use_pallas(mode)
+    if use:
+        return flash_attention_pallas(
+            q, k, v, causal=causal, window=window, scale=scale,
+            interpret=interp, **blocks,
+        )
+    return _ref.attention_ref(q, k, v, causal=causal, window=window, scale=scale)
+
+
+def softmax(x, *, mode: Mode = "auto", **blocks):
+    use, interp = _use_pallas(mode)
+    if use:
+        return softmax_pallas(x, interpret=interp, **blocks)
+    return _ref.softmax_ref(x)
+
+
+def lrn(x, *, size=5, alpha=1e-4, beta=0.75, k=2.0, mode: Mode = "auto", **blocks):
+    use, interp = _use_pallas(mode)
+    if use:
+        return lrn_pallas(
+            x, size=size, alpha=alpha, beta=beta, k=k, interpret=interp, **blocks
+        )
+    return _ref.lrn_ref(x, size=size, alpha=alpha, beta=beta, k=k)
+
+
+def avgpool(x, *, ksize=2, mode: Mode = "auto", **blocks):
+    use, interp = _use_pallas(mode)
+    if use:
+        return avgpool_pallas(x, ksize=ksize, interpret=interp, **blocks)
+    return _ref.avgpool_ref(x, ksize=ksize)
+
+
+def srad_step(
+    img, *, lam=0.5, q0sqr=0.05, fused: bool = True, mode: Mode = "auto"
+):
+    use, interp = _use_pallas(mode)
+    if use:
+        fn = srad_step_fused if fused else srad_step_split
+        return fn(img, lam=lam, q0sqr=q0sqr, interpret=interp)
+    return _ref.srad_step_ref(img, lam=lam, q0sqr=q0sqr)
+
+
+def prefix_scan(x, *, mode: Mode = "auto", **blocks):
+    use, interp = _use_pallas(mode)
+    if use:
+        return prefix_scan_pallas(x, interpret=interp, **blocks)
+    return _ref.prefix_scan_ref(x)
+
+
+def sort_kv(keys, values, *, mode: Mode = "auto"):
+    use, interp = _use_pallas(mode)
+    if use:
+        (n,) = keys.shape
+        n_pow2 = 1 << (n - 1).bit_length()
+        if n_pow2 != n:
+            pad = n_pow2 - n
+            maxval = (
+                jnp.iinfo(keys.dtype).max
+                if jnp.issubdtype(keys.dtype, jnp.integer)
+                else jnp.inf
+            )
+            keys = jnp.pad(keys, (0, pad), constant_values=maxval)
+            values = jnp.pad(values, (0, pad))
+        ko, vo = bitonic_sort_pallas(keys, values, interpret=interp)
+        return ko[:n], vo[:n]
+    return _ref.sort_kv_ref(keys, values)

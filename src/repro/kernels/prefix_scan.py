@@ -1,0 +1,54 @@
+"""Blocked inclusive prefix-sum kernel (substrate of the Where benchmark).
+
+TPU adaptation of the GPU scan: GPUs do block-local scans + a spine scan +
+a fixup pass because blocks run concurrently. A TPU core walks the grid
+**sequentially**, so the cross-block carry is just an SMEM scalar that
+persists across grid steps — one pass, no spine, no fixup. The block-local
+scan is a vectorized ``jnp.cumsum`` in VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["prefix_scan_pallas"]
+
+
+def _scan_kernel(x_ref, o_ref, carry_ref):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        carry_ref[0] = 0.0
+
+    block = x_ref[...].astype(jnp.float32)  # (1, bn)
+    local = jnp.cumsum(block, axis=-1)
+    o_ref[...] = (local + carry_ref[0]).astype(o_ref.dtype)
+    carry_ref[0] = carry_ref[0] + jnp.sum(block)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def prefix_scan_pallas(
+    x: jax.Array,  # (N,)
+    *,
+    block_n: int = 2048,
+    interpret: bool = False,
+) -> jax.Array:
+    (N,) = x.shape
+    bn = min(block_n, N)
+    pn = (-N) % bn
+    x2 = jnp.pad(x, (0, pn))[None, :]  # zeros don't perturb the running sum
+    Np = x2.shape[1]
+    out = pl.pallas_call(
+        _scan_kernel,
+        grid=(Np // bn,),
+        in_specs=[pl.BlockSpec((1, bn), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((1, bn), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, Np), x.dtype),
+        scratch_shapes=[pltpu.SMEM((1,), jnp.float32)],
+        interpret=interpret,
+    )(x2)
+    return out[0, :N]

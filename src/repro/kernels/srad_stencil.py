@@ -1,0 +1,102 @@
+"""SRAD diffusion stencil — the Cooperative-Groups analogue (DESIGN.md §2).
+
+The paper adds grid-wide sync (cooperative groups) to SRAD because its two
+phases — (1) diffusion-coefficient from 4-neighbour gradients, (2) divergence
+update — must be separated by a global barrier. On TPU there is no grid sync
+because there is no grid-wide parallel execution to synchronize; the analogue
+of "one kernel with an internal barrier" vs "two kernel launches" is **one
+fused kernel holding the image in VMEM across both phases** vs **two
+`pallas_call`s with an HBM round-trip between them**. ``srad_step_fused`` and
+``srad_step_split`` implement exactly that pair; the feature benchmark
+measures the round-trip cost the paper's cooperative kernel avoids.
+
+Both variants operate on a whole image per block (the cooperative-kernel
+regime of the paper: its CG version is limited to ≤256², ours to what fits
+VMEM — 1024² fp32 = 4 MiB, comfortably inside 128 MiB).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["srad_step_fused", "srad_step_split"]
+
+
+def _gradients(img):
+    north = jnp.concatenate([img[:1], img[:-1]], axis=0)
+    south = jnp.concatenate([img[1:], img[-1:]], axis=0)
+    west = jnp.concatenate([img[:, :1], img[:, :-1]], axis=1)
+    east = jnp.concatenate([img[:, 1:], img[:, -1:]], axis=1)
+    return north - img, south - img, west - img, east - img
+
+
+def _coeff(img, dN, dS, dW, dE, q0sqr):
+    g2 = (dN * dN + dS * dS + dW * dW + dE * dE) / (img * img)
+    l = (dN + dS + dW + dE) / img
+    num = 0.5 * g2 - 0.0625 * l * l
+    den = 1.0 + 0.25 * l
+    qsqr = num / (den * den)
+    c = 1.0 / (1.0 + (qsqr - q0sqr) / (q0sqr * (1.0 + q0sqr)))
+    return jnp.clip(c, 0.0, 1.0)
+
+
+def _divergence_update(img, c, dN, dS, dW, dE, lam):
+    cS = jnp.concatenate([c[1:], c[-1:]], axis=0)
+    cE = jnp.concatenate([c[:, 1:], c[:, -1:]], axis=1)
+    div = c * dN + cS * dS + c * dW + cE * dE
+    return img + 0.25 * lam * div
+
+
+def _fused_kernel(img_ref, o_ref, *, lam: float, q0sqr: float):
+    img = img_ref[...].astype(jnp.float32)
+    dN, dS, dW, dE = _gradients(img)
+    c = _coeff(img, dN, dS, dW, dE, q0sqr)
+    # "Grid sync" point: on GPU this is grid.sync(); here phase 2 simply
+    # continues on VMEM-resident values — no HBM round-trip.
+    o_ref[...] = _divergence_update(img, c, dN, dS, dW, dE, lam).astype(o_ref.dtype)
+
+
+def _phase1_kernel(img_ref, c_ref, *, q0sqr: float):
+    img = img_ref[...].astype(jnp.float32)
+    dN, dS, dW, dE = _gradients(img)
+    c_ref[...] = _coeff(img, dN, dS, dW, dE, q0sqr).astype(c_ref.dtype)
+
+
+def _phase2_kernel(img_ref, c_ref, o_ref, *, lam: float):
+    img = img_ref[...].astype(jnp.float32)
+    c = c_ref[...].astype(jnp.float32)
+    dN, dS, dW, dE = _gradients(img)  # recomputed, as in Rodinia's srad_v1
+    o_ref[...] = _divergence_update(img, c, dN, dS, dW, dE, lam).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("lam", "q0sqr", "interpret"))
+def srad_step_fused(
+    img: jax.Array, *, lam: float = 0.5, q0sqr: float = 0.05, interpret: bool = False
+) -> jax.Array:
+    h, w = img.shape
+    return pl.pallas_call(
+        functools.partial(_fused_kernel, lam=lam, q0sqr=q0sqr),
+        out_shape=jax.ShapeDtypeStruct((h, w), img.dtype),
+        interpret=interpret,
+    )(img)
+
+
+@functools.partial(jax.jit, static_argnames=("lam", "q0sqr", "interpret"))
+def srad_step_split(
+    img: jax.Array, *, lam: float = 0.5, q0sqr: float = 0.05, interpret: bool = False
+) -> jax.Array:
+    h, w = img.shape
+    c = pl.pallas_call(
+        functools.partial(_phase1_kernel, q0sqr=q0sqr),
+        out_shape=jax.ShapeDtypeStruct((h, w), jnp.float32),
+        interpret=interpret,
+    )(img)
+    return pl.pallas_call(
+        functools.partial(_phase2_kernel, lam=lam),
+        out_shape=jax.ShapeDtypeStruct((h, w), img.dtype),
+        interpret=interpret,
+    )(img, c)

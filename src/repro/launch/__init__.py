@@ -1,0 +1,7 @@
+# Launch layer: production mesh definition (mesh.py), abstract input specs
+# (specs.py), the multi-pod dry-run prover + roofline extractor (dryrun.py),
+# and the fault-tolerant train/serve drivers (train.py / serve.py).
+#
+# NOTE: dryrun.py must be executed as a MAIN MODULE (python -m
+# repro.launch.dryrun) — it sets XLA_FLAGS before importing jax. Importing
+# repro.launch does not touch jax device state.

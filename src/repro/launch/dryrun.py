@@ -1,0 +1,500 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# ruff: noqa: E402  — the two lines above MUST precede every other import:
+# jax locks the device count at first initialization.
+"""Multi-pod dry-run: prove every (arch × shape × mesh) cell lowers,
+compiles, fits, and extract its roofline terms.
+
+For each cell this driver:
+
+1. builds the production mesh (16×16 single-pod / 2×16×16 multi-pod),
+2. derives abstract params / optimizer state / cache via ``jax.eval_shape``
+   (no allocation anywhere),
+3. lowers + compiles the cell's step —
+   ``train_step`` (train_4k), ``prefill`` (prefill_32k), ``serve_step``
+   (decode_32k / long_500k) — under explicit in/out shardings,
+4. prints ``compiled.memory_analysis()`` (proves the per-device footprint
+   fits a 16 GiB v5e) and ``compiled.cost_analysis()`` (FLOPs/bytes for
+   §Roofline), parses collective bytes from the optimized HLO,
+5. writes one JSON artifact per cell under ``artifacts/dryrun/`` —
+   EXPERIMENTS.md §Dry-run/§Roofline and benchmarks/roofline_table.py read
+   these.
+
+Usage:
+  python -m repro.launch.dryrun --arch granite-3-8b --shape train_4k
+  python -m repro.launch.dryrun --all [--mesh single|multi|both] [--force]
+"""
+
+import argparse
+import json
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, get_config
+from repro.core.metrics import (
+    TPUv5e,
+    collective_ops_from_hlo,
+    model_flops,
+    roofline_terms,
+)
+from repro.launch.mesh import data_axes, make_production_mesh
+from repro.launch.specs import SHAPES, applicability, input_specs
+from repro.models import Model
+from repro.optim import AdamW
+from repro.optim.schedule import warmup_cosine
+from repro.runtime.sharding import (
+    ShardingRules,
+    batch_pspec,
+    cache_pspecs,
+    make_activation_sharder,
+    param_pspecs,
+    zero_pspecs,
+)
+from repro.runtime.steps import make_train_step
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..", "artifacts", "dryrun")
+
+
+def _moment_dtype(cfg) -> str:
+    # >30B params: fp32 moments alone exceed the HBM share; use bf16 moments
+    # (quantified in EXPERIMENTS.md §Dry-run).
+    return "bfloat16" if cfg.param_counts()["total"] > 30e9 else "float32"
+
+
+def _named(mesh, specs):
+    from jax.sharding import NamedSharding, PartitionSpec
+
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        specs,
+        is_leaf=lambda x: isinstance(x, PartitionSpec),
+    )
+
+
+def inner_scan_correction(cfg, batch: int, seq: int, kind: str, chips: int) -> float:
+    """Analytic per-device FLOPs of the *time-recurrence* scan bodies.
+
+    ``cost_analysis`` counts a while-loop body once, not × trip count. The
+    layer scan is fixed exactly by 1-/2-period extrapolation (run_cell); the
+    remaining undercount is the O(T) recurrence inside Mamba/xLSTM blocks,
+    whose per-step flops are closed-form (elementwise FMA chains). Decode
+    cells run the recurrence once per call → no correction.
+    """
+    if kind == "decode":
+        return 0.0
+    per_token = 0.0
+    for k in cfg.block_kinds():
+        if k.startswith("mamba"):
+            # a=exp(ΔA), b=Δ·B·x, h=a·h+b, y=C·h: ≈8 flops per (di, ds) cell
+            per_token += 8.0 * cfg.d_inner * cfg.ssm_state
+        elif k == "mlstm":
+            du = 2 * cfg.d_model
+            dh = du // cfg.xlstm_heads
+            # C = f·C + i·kvᵀ (4), y = Cq (2), n updates (≈2)
+            per_token += 8.0 * cfg.xlstm_heads * dh * dh
+        elif k == "slstm":
+            dh = cfg.d_model // cfg.xlstm_heads
+            per_token += 8.0 * cfg.xlstm_heads * dh * dh + 20.0 * cfg.d_model
+    total = per_token * batch * seq
+    if kind == "train":
+        total *= 4.0  # backward ≈ 2× fwd + remat re-forward ≈ 1×
+    return total / chips
+
+
+def build_cell(arch: str, shape: str, multi_pod: bool, *, zero: bool = False,
+               zero3: bool = False,
+               seq_shard: bool = True, accum: int = 1, remat: bool = True,
+               attn_chunk: int = 0, score_dtype: str = "float32",
+               replicate_below: int = 0, moe_group: int = 0,
+               capacity_factor: float = 0.0, moe_gather: bool = False,
+               dp_only: bool = False, moe_split: int = 0, xlstm_chunk: int = 0,
+               cache_seq_shard: bool = False,
+               depth_periods: int | None = None):
+    """Returns (lower_fn, meta) for one cell; lower_fn() -> lowered.
+
+    ``depth_periods`` truncates the stack to k periods — the analysis pair
+    (k=1, 2) from which run_cell extrapolates exact full-depth costs.
+    ``attn_chunk``/``score_dtype``/``replicate_below``/``zero``/``accum``
+    are the §Perf optimization knobs.
+    """
+    import dataclasses
+
+    cfg = get_config(arch)
+    if attn_chunk or score_dtype != "float32":
+        cfg = dataclasses.replace(
+            cfg, attn_chunk=attn_chunk, score_dtype=score_dtype
+        )
+    if moe_group:
+        cfg = dataclasses.replace(cfg, moe_group_size=moe_group)
+    if capacity_factor:
+        cfg = dataclasses.replace(cfg, capacity_factor=capacity_factor)
+    if moe_split:
+        cfg = dataclasses.replace(cfg, moe_split=moe_split)
+    if xlstm_chunk:
+        cfg = dataclasses.replace(cfg, xlstm_chunk=xlstm_chunk)
+    if depth_periods is not None:
+        cfg = dataclasses.replace(
+            cfg, n_layers=depth_periods * len(cfg.block_period())
+        )
+    analysis = depth_periods is not None  # unrolled cost-analysis variant
+    if analysis:
+        cfg = dataclasses.replace(cfg, unroll_inner=True)
+    if dp_only:
+        # Small-model binding: both mesh axes act as data parallelism; all
+        # weights replicate (§Perf xlstm iteration — a 16-way TP of a 350M
+        # model burns ICI for nothing).
+        replicate_below = 1 << 62
+        seq_shard = False
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    axes = data_axes(multi_pod) + (("model",) if dp_only else ())
+    rules = ShardingRules(
+        mesh=mesh,
+        data_axes=axes,
+        seq_shard=seq_shard and SHAPES[shape].kind == "train",
+        replicate_below=replicate_below,
+        moe_gather_tokens=moe_gather,
+        cache_seq_shard=cache_seq_shard,
+    )
+    model = Model(
+        cfg,
+        shard_activation=make_activation_sharder(rules),
+        remat=remat,
+        scan_unroll=analysis,
+    )
+    batch_sds = input_specs(cfg, shape)
+    params_sds = jax.eval_shape(model.init, jax.random.key(0))
+    p_specs = param_pspecs(params_sds, rules)
+    if zero3 and SHAPES[shape].kind == "train":
+        # ZeRO-3 / FSDP: parameters (and hence grads and the accum buffer)
+        # shard over the data axes too; XLA all-gathers one period's weights
+        # per scan step (§Perf jamba iteration — 398B params at 16-way TP
+        # are 49.8 GiB/device; 2-D sharding is the only way to fit).
+        p_specs = zero_pspecs(p_specs, params_sds, rules)
+    spec = SHAPES[shape]
+
+    if spec.kind == "train":
+        opt = AdamW(moment_dtype=_moment_dtype(cfg))
+        opt_sds = jax.eval_shape(opt.init, params_sds)
+        # zero3 already data-extended p_specs; extending twice would bind the
+        # data axes to two dims of one leaf (DuplicateSpecError).
+        m_specs = (
+            zero_pspecs(p_specs, params_sds, rules) if (zero and not zero3) else p_specs
+        )
+        from jax.sharding import PartitionSpec as P
+
+        o_specs = type(opt_sds)(step=P(), m=m_specs, v=m_specs)
+        import functools
+
+        sched = functools.partial(
+            warmup_cosine, peak_lr=3e-4, warmup_steps=100, total_steps=10000
+        )
+        step_fn = make_train_step(model, opt, sched, accum=accum)
+        b_specs = batch_pspec(batch_sds, rules)
+        in_sh = (_named(mesh, p_specs), _named(mesh, o_specs), _named(mesh, b_specs))
+        out_sh = (_named(mesh, p_specs), _named(mesh, o_specs), None)
+
+        def lower():
+            with mesh:
+                return jax.jit(
+                    step_fn, in_shardings=in_sh, out_shardings=out_sh,
+                    donate_argnums=(0, 1),
+                ).lower(params_sds, opt_sds, batch_sds)
+
+        tokens = spec.batch * spec.seq
+    elif spec.kind == "prefill":
+        b_specs = batch_pspec(batch_sds, rules)
+
+        if cfg.encoder_only:
+            def prefill_fn(params, batch):
+                return model.forward(params, batch)
+        else:
+            def prefill_fn(params, batch):
+                return model.prefill(params, batch, spec.seq)
+
+        in_sh = (_named(mesh, p_specs), _named(mesh, b_specs))
+
+        def lower():
+            with mesh:
+                return jax.jit(prefill_fn, in_shardings=in_sh).lower(
+                    params_sds, batch_sds
+                )
+
+        tokens = spec.batch * spec.seq
+    else:  # decode
+        cache_sds = jax.eval_shape(
+            lambda: model.init_cache(spec.batch, spec.seq)
+        )
+        c_specs = cache_pspecs(cache_sds, rules)
+
+        def serve_step(params, cache, tokens, pos):
+            return model.decode_step(params, cache, tokens, pos)
+
+        in_sh = (_named(mesh, p_specs), _named(mesh, c_specs), None, None)
+        out_sh = (None, _named(mesh, c_specs))
+
+        def lower():
+            with mesh:
+                return jax.jit(
+                    serve_step, in_shardings=in_sh, out_shardings=out_sh,
+                    donate_argnums=(1,),
+                ).lower(
+                    params_sds,
+                    cache_sds,
+                    jax.ShapeDtypeStruct((spec.batch,), jnp.int32),
+                    jax.ShapeDtypeStruct((), jnp.int32),
+                )
+
+        tokens = spec.batch  # one token per sequence per step
+    counts = cfg.param_counts()
+    meta = {
+        "arch": arch,
+        "shape": shape,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": 512 if multi_pod else 256,
+        "kind": spec.kind,
+        "tokens_per_step": tokens,
+        "params_total": counts["total"],
+        "params_active": counts["active"],
+        "n_periods": cfg.n_periods,
+        "batch": spec.batch,
+        "seq": spec.seq,
+        "zero": zero,
+        "zero3": zero3,
+        "seq_shard": seq_shard,
+        "accum": accum,
+        "remat": remat,
+        "attn_chunk": attn_chunk,
+        "score_dtype": score_dtype,
+        "replicate_below": replicate_below,
+        "moe_group": moe_group or None,
+        "capacity_factor": capacity_factor or None,
+        "moe_gather": moe_gather,
+        "dp_only": dp_only,
+        "moe_split": moe_split or None,
+        "xlstm_chunk": xlstm_chunk or None,
+        "cache_seq_shard": cache_seq_shard,
+    }
+    return lower, meta
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, out_dir: str, *,
+             force: bool = False, variant: str = "baseline", **opts) -> dict:
+    tag = f"{arch}__{shape}__{'multi' if multi_pod else 'single'}__{variant}"
+    path = os.path.join(out_dir, tag + ".json")
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            return json.load(f)
+    cfg = get_config(arch)
+    ok, reason = applicability(cfg, shape)
+    if not ok:
+        rec = {"tag": tag, "skip": reason, "arch": arch, "shape": shape,
+               "mesh": "2x16x16" if multi_pod else "16x16", "variant": variant}
+        _write(path, rec)
+        print(f"[dryrun] SKIP {tag}: {reason}", flush=True)
+        return rec
+
+    lower_fn, meta = build_cell(arch, shape, multi_pod, **opts)
+    t0 = time.time()
+    lowered = lower_fn()
+    t1 = time.time()
+    compiled = lowered.compile()  # full-depth proof: memory + shardability
+    t2 = time.time()
+    mem = compiled.memory_analysis()
+
+    # Cost analysis pair: XLA counts while-loop bodies once, so full-depth
+    # costs come from exact linear extrapolation over the period count
+    # (cost(k periods) = base + k·delta with the layer scan unrolled), plus
+    # the analytic inner-recurrence correction (inner_scan_correction).
+    # The roofline table is single-pod (assignment); the multi-pod pass is
+    # the shardability/memory proof and reuses the full program's analysis.
+    pair: list[dict] = []
+    pair_colls: list[dict] = []
+    analysis_depths = (1, 2) if not multi_pod else ()
+    for k in analysis_depths:
+        lk, _ = build_cell(arch, shape, multi_pod, depth_periods=k, **opts)
+        ck = lk().compile()
+        pair.append(
+            {kk: float(v) for kk, v in (ck.cost_analysis() or {}).items()
+             if isinstance(v, (int, float))}
+        )
+        hist: dict[str, dict] = {}
+        for op, b in collective_ops_from_hlo(ck.as_text()):
+            h = hist.setdefault(op, {"count": 0, "bytes": 0.0})
+            h["count"] += 1
+            h["bytes"] += b
+        pair_colls.append(hist)
+    if not pair:  # multi-pod proof: unextrapolated full-program analysis
+        pair = [
+            {kk: float(v) for kk, v in (compiled.cost_analysis() or {}).items()
+             if isinstance(v, (int, float))}
+        ] * 2
+        hist = {}
+        for op, b in collective_ops_from_hlo(compiled.as_text()):
+            h = hist.setdefault(op, {"count": 0, "bytes": 0.0})
+            h["count"] += 1
+            h["bytes"] += b
+        pair_colls = [hist, hist]
+    P = meta["n_periods"]
+
+    def extrap(a: float, b: float) -> float:
+        return max(0.0, a + (P - 1) * (b - a))
+
+    keys = set(pair[0]) | set(pair[1])
+    cost = {k: extrap(pair[0].get(k, 0.0), pair[1].get(k, 0.0)) for k in keys}
+    scan_fix = inner_scan_correction(
+        get_config(arch), meta["batch"], meta["seq"], meta["kind"], meta["chips"]
+    )
+    cost["flops"] = cost.get("flops", 0.0) + scan_fix
+    coll_hist = {}
+    for op in set(pair_colls[0]) | set(pair_colls[1]):
+        c0 = pair_colls[0].get(op, {"count": 0, "bytes": 0.0})
+        c1 = pair_colls[1].get(op, {"count": 0, "bytes": 0.0})
+        coll_hist[op] = {
+            "count": extrap(c0["count"], c1["count"]),
+            "bytes": extrap(c0["bytes"], c1["bytes"]),
+        }
+    coll_bytes = float(sum(h["bytes"] for h in coll_hist.values()))
+    rt = roofline_terms(cost, collective_bytes=coll_bytes)
+    # MODEL_FLOPS convention: 6·N·D counts fwd+bwd (training). Inference
+    # steps do forward only → 2·N·D.
+    mf = model_flops(
+        meta["params_total"], meta["tokens_per_step"],
+        active_params=meta["params_active"],
+    )
+    if meta["kind"] != "train":
+        mf /= 3.0
+    hlo_flops_global = rt.flops * meta["chips"]
+    rec = {
+        "tag": tag,
+        "variant": variant,
+        **meta,
+        "compile_ok": True,
+        "analysis": "extrapolated" if not multi_pod else "full-program-proof",
+        "lower_s": round(t1 - t0, 2),
+        "compile_s": round(t2 - t1, 2),
+        "memory": {
+            k: float(getattr(mem, k))
+            for k in (
+                "argument_size_in_bytes",
+                "output_size_in_bytes",
+                "temp_size_in_bytes",
+                "generated_code_size_in_bytes",
+            )
+            if hasattr(mem, k)
+        },
+        "cost": {k: float(v) for k, v in cost.items() if isinstance(v, (int, float))},
+        "inner_scan_correction_flops": scan_fix,
+        "collectives": coll_hist,
+        "roofline": {
+            "flops_per_device": rt.flops,
+            "hbm_bytes_per_device": rt.hbm_bytes,
+            "collective_bytes_per_device": rt.collective_bytes,
+            "compute_s": rt.compute_s,
+            "memory_s": rt.memory_s,
+            "collective_s": rt.collective_s,
+            "dominant": rt.dominant,
+            "roofline_fraction": rt.roofline_fraction,
+            "arithmetic_intensity": rt.arithmetic_intensity(),
+        },
+        "model_flops": mf,
+        "useful_compute_ratio": (mf / hlo_flops_global) if hlo_flops_global else 0.0,
+    }
+    _write(path, rec)
+    hbm_gib = sum(rec["memory"].values()) / 2**30 if rec["memory"] else float("nan")
+    print(
+        f"[dryrun] OK {tag}: compile {rec['compile_s']}s, "
+        f"mem/device ≈ {hbm_gib:.2f} GiB "
+        f"(args {rec['memory'].get('argument_size_in_bytes', 0) / 2**30:.2f} + "
+        f"temp {rec['memory'].get('temp_size_in_bytes', 0) / 2**30:.2f}), "
+        f"dominant={rec['roofline']['dominant']} "
+        f"fraction={rec['roofline']['roofline_fraction']:.3f}",
+        flush=True,
+    )
+    print(f"  memory_analysis: {rec['memory']}", flush=True)
+    print(
+        "  cost_analysis: flops=%.3e bytes=%.3e coll=%.3e"
+        % (rt.flops, rt.hbm_bytes, rt.collective_bytes),
+        flush=True,
+    )
+    return rec
+
+
+def _write(path: str, rec: dict) -> None:
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(rec, f, indent=1, sort_keys=True)
+    os.replace(tmp, path)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", choices=ARCHS, default=None)
+    ap.add_argument("--shape", choices=sorted(SHAPES), default=None)
+    ap.add_argument("--mesh", choices=("single", "multi", "both"), default="both")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--zero", action="store_true")
+    ap.add_argument("--zero3", action="store_true")
+    ap.add_argument("--no-seq-shard", action="store_true")
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--attn-chunk", type=int, default=0)
+    ap.add_argument("--score-dtype", default="float32")
+    ap.add_argument("--replicate-below", type=int, default=0)
+    ap.add_argument("--moe-group", type=int, default=0)
+    ap.add_argument("--capacity-factor", type=float, default=0.0)
+    ap.add_argument("--moe-gather", action="store_true")
+    ap.add_argument("--dp-only", action="store_true")
+    ap.add_argument("--moe-split", type=int, default=0)
+    ap.add_argument("--xlstm-chunk", type=int, default=0)
+    ap.add_argument("--cache-seq-shard", action="store_true")
+    ap.add_argument("--out", default=os.path.normpath(ARTIFACT_DIR))
+    args = ap.parse_args(argv)
+
+    cells: list[tuple[str, str]] = []
+    if args.all:
+        cells = [(a, s) for a in ARCHS for s in SHAPES]
+    else:
+        if not (args.arch and args.shape):
+            ap.error("--arch and --shape required unless --all")
+        cells = [(args.arch, args.shape)]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    failures = []
+    for arch, shape in cells:
+        for multi in meshes:
+            try:
+                run_cell(
+                    arch, shape, multi, args.out, force=args.force,
+                    variant=args.variant, zero=args.zero, zero3=args.zero3,
+                    seq_shard=not args.no_seq_shard, accum=args.accum,
+                    remat=not args.no_remat, attn_chunk=args.attn_chunk,
+                    score_dtype=args.score_dtype,
+                    replicate_below=args.replicate_below,
+                    moe_group=args.moe_group,
+                    capacity_factor=args.capacity_factor,
+                    moe_gather=args.moe_gather,
+                    dp_only=args.dp_only,
+                    moe_split=args.moe_split,
+                    xlstm_chunk=args.xlstm_chunk,
+                    cache_seq_shard=args.cache_seq_shard,
+                )
+            except Exception as e:  # noqa: BLE001 — report, keep proving cells
+                failures.append((arch, shape, multi, repr(e)))
+                print(f"[dryrun] FAIL {arch}/{shape}/multi={multi}: {e!r}", flush=True)
+    if failures:
+        print(f"[dryrun] {len(failures)} FAILURES", flush=True)
+        return 1
+    print("[dryrun] all requested cells passed", flush=True)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

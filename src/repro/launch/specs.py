@@ -1,0 +1,92 @@
+"""Abstract input specs for every (architecture × input shape) cell.
+
+``input_specs`` returns ``jax.ShapeDtypeStruct`` stand-ins — weak-type
+correct, shardable, zero allocation — for each of the four assigned shapes:
+
+- ``train_4k``:    seq 4096 × global batch 256  → lowers ``train_step``
+- ``prefill_32k``: seq 32768 × global batch 32  → lowers ``prefill``
+- ``decode_32k``:  KV len 32768 × batch 128     → lowers ``serve_step``
+- ``long_500k``:   KV len 524288 × batch 1      → lowers ``serve_step``
+
+Applicability skips (DESIGN.md §4 / §Arch-applicability): encoder-only
+archs have no decode; pure full-attention archs skip ``long_500k`` (needs
+sub-quadratic attention); SWA/SSM/hybrid archs run it.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig
+
+__all__ = ["SHAPES", "ShapeSpec", "applicability", "input_specs"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq: int
+    batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+
+def _sub_quadratic(cfg: ArchConfig) -> bool:
+    """Can this arch decode a 524k context without O(S) full-attention reads
+    growing quadratically in total? SSM/hybrid state is O(1); SWA is
+    O(window)."""
+    kinds = cfg.block_kinds()
+    has_full_attn = any(k.startswith("attn") for k in kinds) and cfg.window is None
+    return not has_full_attn or cfg.family in ("ssm",)
+
+
+def applicability(cfg: ArchConfig, shape: str) -> tuple[bool, str]:
+    spec = SHAPES[shape]
+    if spec.kind == "decode" and cfg.encoder_only:
+        return False, "encoder-only: no autoregressive decode step"
+    if shape == "long_500k":
+        if cfg.family == "hybrid":
+            # Jamba: full attention layers, but 1:7 diluted with O(1) Mamba;
+            # runs per the assignment (SSM/hybrid listed as eligible).
+            return True, ""
+        if not _sub_quadratic(cfg):
+            return False, "pure full-attention arch: 524k decode needs sub-quadratic attention"
+    return True, ""
+
+
+def token_dtype():
+    return jnp.int32
+
+
+def input_specs(cfg: ArchConfig, shape: str) -> dict:
+    """ShapeDtypeStructs for the *batch* of this cell (params/cache specs are
+    derived separately from model.init/init_cache via eval_shape)."""
+    spec = SHAPES[shape]
+    B, T = spec.batch, spec.seq
+    dt = jnp.dtype(cfg.dtype)
+    sds = jax.ShapeDtypeStruct
+    if spec.kind in ("train", "prefill"):
+        if cfg.input_mode == "embeds":
+            batch = {"embeds": sds((B, T, cfg.d_model), dt)}
+            if cfg.rope == "mrope":
+                batch["positions"] = sds((B, T, 3), jnp.int32)
+        else:
+            batch = {"tokens": sds((B, T), jnp.int32)}
+        if spec.kind == "train":
+            batch["labels"] = sds((B, T), jnp.int32)
+        return batch
+    # decode: one new token against a cache of length seq
+    return {
+        "tokens": sds((B,), jnp.int32),
+        "pos": sds((), jnp.int32),
+    }

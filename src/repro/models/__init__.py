@@ -1,0 +1,7 @@
+# LM-family model zoo: a single functional Model (models/model.py) driven by
+# ArchConfig (models/config.py) covering dense GQA transformers, MoE
+# (GShard-dispatch), Mamba/xLSTM recurrent mixers, the Jamba hybrid layout,
+# encoder-only audio backbones, and the Qwen2-VL M-RoPE VLM backbone.
+
+from repro.models.config import ArchConfig  # noqa: F401
+from repro.models.model import Model  # noqa: F401

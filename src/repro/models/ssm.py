@@ -1,0 +1,451 @@
+"""Recurrent mixers: Mamba (S6) and the xLSTM pair (mLSTM / sLSTM).
+
+All three share one execution pattern chosen for TPU memory sanity
+(DESIGN.md §5): projections run in parallel over the sequence; only the
+recurrence itself is a ``lax.scan`` over time whose body *recomputes* the
+per-step outer products from O(d)-sized inputs — the (T, B, d_inner, d_state)
+transition tensors are never materialized, so scan-saved residuals stay
+O(T·B·d) and the backward pass reconstructs transitions locally (the same
+trade selective-scan kernels make on GPU).
+
+Each mixer exposes:
+- ``init_*(key, cfg)``
+- ``apply_*(p, cfg, x)``            — full sequence, returns (y, final_state)
+- ``step_*(p, cfg, x_t, state)``    — one decode step, returns (y_t, state)
+- ``init_state_*(cfg, batch)``      — zero state for decode
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig
+from repro.models.layers import dtype_of, init_dense, rms_norm
+
+__all__ = [
+    "init_mamba", "apply_mamba", "step_mamba", "init_state_mamba",
+    "init_mlstm", "apply_mlstm", "step_mlstm", "init_state_mlstm",
+    "init_slstm", "apply_slstm", "step_slstm", "init_state_slstm",
+]
+
+
+# ---------------------------------------------------------------------------
+# Mamba (S6 selective SSM).
+# ---------------------------------------------------------------------------
+
+
+def init_mamba(key, cfg: ArchConfig) -> dict:
+    dt = dtype_of(cfg)
+    d, di, ds, dtr, ck = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.dt_rank, cfg.ssm_conv
+    keys = jax.random.split(key, 6)
+    # S4/Mamba A initialization: A_i,s = -(s+1).
+    a = jnp.tile(jnp.arange(1, ds + 1, dtype=jnp.float32)[None, :], (di, 1))
+    return {
+        "in_proj": init_dense(keys[0], d, 2 * di, dt),
+        "conv_w": (0.1 * jax.random.normal(keys[1], (ck, di))).astype(dt),
+        "conv_b": jnp.zeros((di,), dt),
+        "x_proj": init_dense(keys[2], di, dtr + 2 * ds, dt),
+        "dt_w": init_dense(keys[3], dtr, di, dt),
+        "dt_b": jnp.log(jnp.expm1(0.01)) * jnp.ones((di,), jnp.float32),  # dt≈0.01
+        "A_log": jnp.log(a),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": init_dense(
+            keys[4], di, d, dt, scale=0.02 / (2 * cfg.n_layers) ** 0.5
+        ),
+    }
+
+
+def _mamba_conv_full(p, x):  # x (B, T, di) -> causal depthwise conv
+    ck = p["conv_w"].shape[0]
+    xp = jnp.pad(x, ((0, 0), (ck - 1, 0), (0, 0)))
+    out = sum(xp[:, i : i + x.shape[1]] * p["conv_w"][i] for i in range(ck))
+    return out + p["conv_b"]
+
+
+def _mamba_scan_inputs(p, cfg, xc):
+    """xc (B, T, di) conv output -> (delta, Bt, Ct) for the recurrence."""
+    proj = xc @ p["x_proj"]  # (B, T, dtr + 2 ds)
+    dtr, ds = cfg.dt_rank, cfg.ssm_state
+    d_raw, Bt, Ct = jnp.split(proj, [dtr, dtr + ds], axis=-1)
+    delta = jax.nn.softplus(
+        (d_raw @ p["dt_w"]).astype(jnp.float32) + p["dt_b"]
+    )  # (B, T, di)
+    return delta, Bt.astype(jnp.float32), Ct.astype(jnp.float32)
+
+
+def _mamba_step(p, h, inputs):
+    """One recurrence step. h (B, di, ds) fp32."""
+    xc_t, delta_t, B_t, C_t = inputs  # (B,di) (B,di) (B,ds) (B,ds)
+    A = -jnp.exp(p["A_log"])  # (di, ds)
+    a = jnp.exp(delta_t[:, :, None] * A[None])  # (B, di, ds)
+    b = delta_t[:, :, None] * B_t[:, None, :] * xc_t.astype(jnp.float32)[:, :, None]
+    h = a * h + b
+    y = jnp.einsum("bis,bs->bi", h, C_t) + p["D"] * xc_t.astype(jnp.float32)
+    return h, y
+
+
+def init_state_mamba(cfg: ArchConfig, batch: int) -> dict:
+    di, ds, ck = cfg.d_inner, cfg.ssm_state, cfg.ssm_conv
+    return {
+        "h": jnp.zeros((batch, di, ds), jnp.float32),
+        "conv": jnp.zeros((batch, ck - 1, di), dtype_of(cfg)),
+    }
+
+
+def apply_mamba(p: dict, cfg: ArchConfig, x: jax.Array):
+    """x (B, T, d) -> (y (B, T, d), final_state)."""
+    B, T, _ = x.shape
+    xz = x @ p["in_proj"]
+    x1, z = jnp.split(xz, 2, axis=-1)  # (B, T, di)
+    xc = jax.nn.silu(_mamba_conv_full(p, x1))
+    delta, Bt, Ct = _mamba_scan_inputs(p, cfg, xc)
+
+    def body(h, inp):
+        h, y = _mamba_step(p, h, inp)
+        return h, y
+
+    h0 = jnp.zeros((B, cfg.d_inner, cfg.ssm_state), jnp.float32)
+    scan_in = (
+        jnp.swapaxes(xc, 0, 1),
+        jnp.swapaxes(delta, 0, 1),
+        jnp.swapaxes(Bt, 0, 1),
+        jnp.swapaxes(Ct, 0, 1),
+    )
+    h_final, ys = jax.lax.scan(body, h0, scan_in)
+    y = jnp.swapaxes(ys, 0, 1).astype(x.dtype)  # (B, T, di)
+    out = (y * jax.nn.silu(z)) @ p["out_proj"]
+    ck = cfg.ssm_conv
+    tail = x1[:, -(ck - 1) :, :] if T >= ck - 1 else jnp.pad(
+        x1, ((0, 0), (ck - 1 - T, 0), (0, 0))
+    )
+    return out, {"h": h_final, "conv": tail}
+
+
+def step_mamba(p: dict, cfg: ArchConfig, x_t: jax.Array, state: dict):
+    """x_t (B, d), state from init_state/prefill -> (y_t (B, d), state)."""
+    xz = x_t @ p["in_proj"]
+    x1, z = jnp.split(xz, 2, axis=-1)  # (B, di)
+    window = jnp.concatenate([state["conv"], x1[:, None, :]], axis=1)  # (B, ck, di)
+    xc = jax.nn.silu(
+        jnp.einsum("bki,ki->bi", window.astype(jnp.float32), p["conv_w"].astype(jnp.float32))
+        + p["conv_b"].astype(jnp.float32)
+    ).astype(x_t.dtype)
+    proj = xc @ p["x_proj"]
+    dtr, ds = cfg.dt_rank, cfg.ssm_state
+    d_raw, B_t, C_t = jnp.split(proj, [dtr, dtr + ds], axis=-1)
+    delta = jax.nn.softplus((d_raw @ p["dt_w"]).astype(jnp.float32) + p["dt_b"])
+    h, y = _mamba_step(
+        p, state["h"], (xc, delta, B_t.astype(jnp.float32), C_t.astype(jnp.float32))
+    )
+    out = (y.astype(x_t.dtype) * jax.nn.silu(z)) @ p["out_proj"]
+    return out, {"h": h, "conv": window[:, 1:]}
+
+
+# ---------------------------------------------------------------------------
+# mLSTM (xLSTM matrix-memory block) — self-contained block with ×2 up-proj.
+# ---------------------------------------------------------------------------
+
+
+def init_mlstm(key, cfg: ArchConfig) -> dict:
+    dt = dtype_of(cfg)
+    d = cfg.d_model
+    du = 2 * d
+    H = cfg.xlstm_heads
+    keys = jax.random.split(key, 8)
+    return {
+        "ln": jnp.ones((d,), dt),
+        "w_up": init_dense(keys[0], d, 2 * du, dt),
+        "conv_w": (0.1 * jax.random.normal(keys[1], (cfg.ssm_conv, du))).astype(dt),
+        "conv_b": jnp.zeros((du,), dt),
+        "wq": init_dense(keys[2], du, du, dt),
+        "wk": init_dense(keys[3], du, du, dt),
+        "wv": init_dense(keys[4], du, du, dt),
+        "w_gates": init_dense(keys[5], du, 2 * H, jnp.float32),
+        "b_gates": jnp.concatenate(
+            [jnp.zeros((H,)), jnp.linspace(3.0, 6.0, H)]  # forget bias high
+        ),
+        "gn": jnp.ones((du,), dt),
+        "w_down": init_dense(
+            keys[6], du, d, dt, scale=0.02 / (2 * cfg.n_layers) ** 0.5
+        ),
+    }
+
+
+def _mlstm_step(C, n, m, q, k, v, i_raw, f_raw):
+    """Stabilized exponential-gating matrix-memory update (xLSTM eq. 19-27).
+
+    C (B,H,dk,dv), n (B,H,dk), m (B,H); q/k/v (B,H,dh); i_raw/f_raw (B,H).
+    """
+    m_new = jnp.maximum(f_raw + m, i_raw)
+    i = jnp.exp(i_raw - m_new)
+    f = jnp.exp(f_raw + m - m_new)
+    C = f[..., None, None] * C + i[..., None, None] * (
+        k[..., :, None] * v[..., None, :]
+    )
+    n = f[..., None] * n + i[..., None] * k
+    num = jnp.einsum("bhkv,bhk->bhv", C, q)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, q)), 1.0)
+    return C, n, m_new, num / den[..., None]
+
+
+def init_state_mlstm(cfg: ArchConfig, batch: int) -> dict:
+    du = 2 * cfg.d_model
+    H = cfg.xlstm_heads
+    dh = du // H
+    return {
+        "C": jnp.zeros((batch, H, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, H, dh), jnp.float32),
+        "m": jnp.zeros((batch, H), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, du), dtype_of(cfg)),
+    }
+
+
+def _mlstm_parallel_inputs(p, cfg, xm):
+    """xm (B, T, du) -> per-step q,k,v,i,f (fp32 gates)."""
+    H = cfg.xlstm_heads
+    du = xm.shape[-1]
+    dh = du // H
+    xc = jax.nn.silu(_mamba_conv_full({"conv_w": p["conv_w"], "conv_b": p["conv_b"]}, xm))
+    B, T, _ = xm.shape
+    q = (xc @ p["wq"]).reshape(B, T, H, dh).astype(jnp.float32) * dh**-0.5
+    k = (xc @ p["wk"]).reshape(B, T, H, dh).astype(jnp.float32) * dh**-0.5
+    v = (xm @ p["wv"]).reshape(B, T, H, dh).astype(jnp.float32)
+    gates = xc.astype(jnp.float32) @ p["w_gates"] + p["b_gates"]
+    i_raw, f_raw = jnp.split(gates, 2, axis=-1)  # (B, T, H)
+    f_raw = jax.nn.log_sigmoid(f_raw)  # f = sigmoid in log space
+    return q, k, v, i_raw, f_raw, xc
+
+
+def _group_norm_heads(h, gamma, H):
+    """Per-head group normalization of (B, T, du) or (B, du)."""
+    shp = h.shape
+    hh = h.reshape(*shp[:-1], H, shp[-1] // H).astype(jnp.float32)
+    mu = hh.mean(-1, keepdims=True)
+    var = hh.var(-1, keepdims=True)
+    out = (hh - mu) * jax.lax.rsqrt(var + 1e-5)
+    return out.reshape(shp).astype(gamma.dtype) * gamma
+
+
+def _mlstm_chunk_body(carry, inp):
+    """One chunk of the chunkwise-parallel stabilized mLSTM.
+
+    Derivation (EXPERIMENTS.md §Perf, xlstm iteration 3): with per-step log
+    decays f̃ and log inputs ĩ, define within a chunk of length L
+
+        B_j = Σ_{r≤j} f̃_r,      a_k = ĩ_k − B_k,
+        M_j = max(m_prev, cummax_{k≤j} a_k)       (the running stabilizer),
+
+    then the sequential recurrence is exactly
+
+        h_j ∝ e^{m_prev−M_j}·C_prev q_j + Σ_{k≤j} e^{a_k−M_j}(k_k·q_j) v_k,
+        n_j = e^{m_prev−M_j}·n_prev + Σ_{k≤j} e^{a_k−M_j} k_k,
+        C_new = e^{m_prev−M_L} C_prev + Σ_k e^{a_k−M_L} k_k v_kᵀ,
+        m_new = B_L + M_L.
+
+    All exponents are ≤ 0 (stable); the state is touched once per chunk, so
+    HBM traffic on the (dh × dh) matrix memory drops by L×.
+    """
+    C, n, m = carry
+    q, k, v, i_raw, f_raw = inp  # (B, L, H, dh) / gates (B, L, H)
+    B_cum = jnp.cumsum(f_raw, axis=1)  # (B, L, H)
+    a = i_raw - B_cum
+    M = jnp.maximum(m[:, None], jax.lax.cummax(a, axis=1))  # (B, L, H)
+    inter = jnp.exp(m[:, None] - M)  # (B, L, H)
+
+    # inter-chunk contribution from the carried state
+    num = inter[..., None] * jnp.einsum("bhkv,blhk->blhv", C, q)
+    n_j = inter[..., None] * n[:, None] + 0.0
+
+    # intra-chunk attention-like block (causal within the chunk)
+    s = jnp.einsum("blhd,bmhd->bhlm", q, k)  # (B, H, L, L)
+    w = jnp.exp(
+        jnp.moveaxis(a, -1, 1)[:, :, None, :] - jnp.moveaxis(M, -1, 1)[:, :, :, None]
+    )  # w[j, k] = e^{a_k - M_j}
+    L = q.shape[1]
+    causal = jnp.tril(jnp.ones((L, L), bool))
+    w = jnp.where(causal[None, None], w, 0.0)
+    num = num + jnp.einsum("bhlm,bmhv->blhv", s * w, v)
+    n_j = n_j + jnp.einsum("bhlm,bmhd->blhd", w, k)
+
+    den = jnp.maximum(jnp.abs(jnp.einsum("blhd,blhd->blh", n_j, q)), 1.0)
+    h = num / den[..., None]
+
+    # carry update (state touched once per chunk)
+    scale_prev = jnp.exp(m - M[:, -1])  # (B, H)
+    wL = jnp.exp(a - M[:, -1][:, None])  # (B, L, H)
+    C_new = scale_prev[..., None, None] * C + jnp.einsum(
+        "blhk,blhv->bhkv", wL[..., None] * k, v
+    )
+    n_new = scale_prev[..., None] * n + jnp.einsum("blh,blhd->bhd", wL, k)
+    m_new = B_cum[:, -1] + M[:, -1]
+    return (C_new, n_new, m_new), h
+
+
+def apply_mlstm(p: dict, cfg: ArchConfig, x: jax.Array):
+    B, T, d = x.shape
+    H = cfg.xlstm_heads
+    xn = rms_norm(x, p["ln"], cfg.norm_eps)
+    up = xn @ p["w_up"]
+    xm, z = jnp.split(up, 2, axis=-1)  # (B, T, du)
+    q, k, v, i_raw, f_raw, _ = _mlstm_parallel_inputs(p, cfg, xm)
+
+    du = xm.shape[-1]
+    dh = du // H
+    init = (
+        jnp.zeros((B, H, dh, dh), jnp.float32),
+        jnp.zeros((B, H, dh), jnp.float32),
+        jnp.zeros((B, H), jnp.float32),
+    )
+    L = cfg.xlstm_chunk
+    if L and T % L == 0 and T > L:
+        nc = T // L
+        chunked = lambda arr: jnp.swapaxes(
+            arr.reshape(B, nc, L, *arr.shape[2:]), 0, 1
+        )
+        (C, n, m), hs = jax.lax.scan(
+            _mlstm_chunk_body,
+            init,
+            (chunked(q), chunked(k), chunked(v), chunked(i_raw), chunked(f_raw)),
+        )
+        h = jnp.moveaxis(hs, 0, 1).reshape(B, T, du).astype(x.dtype)
+    else:
+        def body(carry, inp):
+            C, n, m = carry
+            qt, kt, vt, it, ft = inp
+            C, n, m, h = _mlstm_step(C, n, m, qt, kt, vt, it, ft)
+            return (C, n, m), h
+
+        sw = lambda a: jnp.swapaxes(a, 0, 1)
+        (C, n, m), hs = jax.lax.scan(
+            body, init, (sw(q), sw(k), sw(v), sw(i_raw), sw(f_raw))
+        )
+        h = jnp.swapaxes(hs, 0, 1).reshape(B, T, du).astype(x.dtype)
+    h = _group_norm_heads(h, p["gn"], H)
+    out = (h * jax.nn.silu(z)) @ p["w_down"]
+    ck = cfg.ssm_conv
+    tail = xm[:, -(ck - 1) :, :] if T >= ck - 1 else jnp.pad(
+        xm, ((0, 0), (ck - 1 - T, 0), (0, 0))
+    )
+    return x + out, {"C": C, "n": n, "m": m, "conv": tail}
+
+
+def step_mlstm(p: dict, cfg: ArchConfig, x_t: jax.Array, state: dict):
+    B, d = x_t.shape
+    H = cfg.xlstm_heads
+    xn = rms_norm(x_t, p["ln"], cfg.norm_eps)
+    up = xn @ p["w_up"]
+    xm, z = jnp.split(up, 2, axis=-1)  # (B, du)
+    du = xm.shape[-1]
+    dh = du // H
+    window = jnp.concatenate([state["conv"], xm[:, None, :]], axis=1)
+    xc = jax.nn.silu(
+        jnp.einsum("bki,ki->bi", window.astype(jnp.float32), p["conv_w"].astype(jnp.float32))
+        + p["conv_b"].astype(jnp.float32)
+    ).astype(x_t.dtype)
+    q = (xc @ p["wq"]).reshape(B, H, dh).astype(jnp.float32) * dh**-0.5
+    k = (xc @ p["wk"]).reshape(B, H, dh).astype(jnp.float32) * dh**-0.5
+    v = (xm @ p["wv"]).reshape(B, H, dh).astype(jnp.float32)
+    gates = xc.astype(jnp.float32) @ p["w_gates"] + p["b_gates"]
+    i_raw, f_raw = jnp.split(gates, 2, axis=-1)
+    f_raw = jax.nn.log_sigmoid(f_raw)
+    C, n, m, h = _mlstm_step(state["C"], state["n"], state["m"], q, k, v, i_raw, f_raw)
+    h = _group_norm_heads(h.reshape(B, du).astype(x_t.dtype), p["gn"], H)
+    out = (h * jax.nn.silu(z)) @ p["w_down"]
+    return x_t + out, {"C": C, "n": n, "m": m, "conv": window[:, 1:]}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM (xLSTM scalar-memory block with per-head recurrence).
+# ---------------------------------------------------------------------------
+
+
+def init_slstm(key, cfg: ArchConfig) -> dict:
+    dt = dtype_of(cfg)
+    d = cfg.d_model
+    H = cfg.xlstm_heads
+    dh = d // H
+    keys = jax.random.split(key, 8)
+    # xLSTM's 4/3 post-up-projection, rounded up to 128 for MXU alignment
+    # (and 16-way TP divisibility) — matches production xLSTM packings.
+    dff = -(-(4 * d) // (3 * 128)) * 128
+
+    def rec(k):  # block-diagonal per-head recurrent matrix
+        return (0.02 * jax.random.normal(k, (H, dh, dh))).astype(jnp.float32)
+
+    return {
+        "ln": jnp.ones((d,), dt),
+        "w_x": init_dense(keys[0], d, 4 * d, dt),  # z, i, f, o stacked
+        "r_z": rec(keys[1]),
+        "r_i": rec(keys[2]),
+        "r_f": rec(keys[3]),
+        "r_o": rec(keys[4]),
+        "b": jnp.concatenate(
+            [jnp.zeros((2 * d,)), jnp.full((d,), 3.0), jnp.zeros((d,))]
+        ),  # forget bias high
+        "gn": jnp.ones((d,), dt),
+        "w_ff1": init_dense(keys[5], d, dff, dt),
+        "w_ff2": init_dense(keys[6], dff, d, dt, scale=0.02 / (2 * cfg.n_layers) ** 0.5),
+    }
+
+
+def init_state_slstm(cfg: ArchConfig, batch: int) -> dict:
+    d = cfg.d_model
+    return {
+        "c": jnp.zeros((batch, d), jnp.float32),
+        "n": jnp.ones((batch, d), jnp.float32),
+        "m": jnp.zeros((batch, d), jnp.float32),
+        "h": jnp.zeros((batch, d), jnp.float32),
+    }
+
+
+def _slstm_cell(p, cfg, state, x_proj):
+    """x_proj (B, 4d) = x @ w_x + b. Returns (state, h_out)."""
+    H = cfg.xlstm_heads
+    d = cfg.d_model
+    dh = d // H
+    c, n, m, h = state["c"], state["n"], state["m"], state["h"]
+    B = c.shape[0]
+
+    def rmul(r, hvec):  # (H,dh,dh) x (B,d) block-diag matvec
+        return jnp.einsum("bhd,hde->bhe", hvec.reshape(B, H, dh), r).reshape(B, d)
+
+    zx, ix, fx, ox = jnp.split(x_proj.astype(jnp.float32), 4, axis=-1)
+    z = jnp.tanh(zx + rmul(p["r_z"], h))
+    i_raw = ix + rmul(p["r_i"], h)
+    f_raw = jax.nn.log_sigmoid(fx + rmul(p["r_f"], h))
+    o = jax.nn.sigmoid(ox + rmul(p["r_o"], h))
+    m_new = jnp.maximum(f_raw + m, i_raw)
+    i = jnp.exp(i_raw - m_new)
+    f = jnp.exp(f_raw + m - m_new)
+    c = f * c + i * z
+    n = f * n + i
+    h_new = o * c / jnp.maximum(n, 1e-6)
+    return {"c": c, "n": n, "m": m_new, "h": h_new}, h_new
+
+
+def apply_slstm(p: dict, cfg: ArchConfig, x: jax.Array):
+    B, T, d = x.shape
+    xn = rms_norm(x, p["ln"], cfg.norm_eps)
+    xp = xn @ p["w_x"] + p["b"].astype(xn.dtype)  # (B, T, 4d)
+
+    def body(state, xt):
+        state, h = _slstm_cell(p, cfg, state, xt)
+        return state, h
+
+    state, hs = jax.lax.scan(body, init_state_slstm(cfg, B), jnp.swapaxes(xp, 0, 1))
+    h = jnp.swapaxes(hs, 0, 1).astype(x.dtype)  # (B, T, d)
+    h = _group_norm_heads(h, p["gn"], cfg.xlstm_heads)
+    h = x + h
+    ff = jax.nn.gelu(h @ p["w_ff1"]) @ p["w_ff2"]
+    return h + ff, state
+
+
+def step_slstm(p: dict, cfg: ArchConfig, x_t: jax.Array, state: dict):
+    xn = rms_norm(x_t, p["ln"], cfg.norm_eps)
+    xp = xn @ p["w_x"] + p["b"].astype(xn.dtype)
+    state, h = _slstm_cell(p, cfg, state, xp)
+    h = _group_norm_heads(h.astype(x_t.dtype), p["gn"], cfg.xlstm_heads)
+    h = x_t + h
+    ff = jax.nn.gelu(h @ p["w_ff1"]) @ p["w_ff2"]
+    return h + ff, state

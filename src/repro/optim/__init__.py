@@ -1,0 +1,9 @@
+# Optimizer substrate: AdamW with configurable moment dtype (bf16 moments
+# for the 398B-class models), warmup-cosine schedules, global-norm clipping,
+# ZeRO-1 optimizer-state partitioning rules, and int8 error-feedback
+# gradient compression for the cross-pod link tier.
+
+from repro.optim.adamw import AdamW, AdamWState  # noqa: F401
+from repro.optim.schedule import warmup_cosine  # noqa: F401
+from repro.optim.clip import clip_by_global_norm, global_norm  # noqa: F401
+from repro.optim.compression import ErrorFeedbackInt8  # noqa: F401

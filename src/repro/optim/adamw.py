@@ -1,0 +1,73 @@
+"""AdamW with configurable moment dtype and donated in-place update.
+
+For the 100B+ configs, fp32 (m, v) alone exceeds a v5e's HBM share
+(EXPERIMENTS.md §Dry-run memory table); ``moment_dtype="bfloat16"`` halves
+optimizer state — a distributed-optimization trade the dry-run memory
+analysis quantifies. Bias correction runs in fp32 regardless; the update is
+computed in fp32 and cast back into the parameter dtype.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamW", "AdamWState"]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class AdamWState:
+    step: jax.Array  # scalar int32
+    m: Any  # pytree like params
+    v: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    moment_dtype: str = "float32"
+
+    def init(self, params) -> AdamWState:
+        dt = jnp.dtype(self.moment_dtype)
+        zeros = lambda p: jnp.zeros(p.shape, dt)
+        return AdamWState(
+            step=jnp.zeros((), jnp.int32),
+            m=jax.tree.map(zeros, params),
+            v=jax.tree.map(zeros, params),
+        )
+
+    def update(self, grads, state: AdamWState, params, lr) -> tuple[Any, AdamWState]:
+        step = state.step + 1
+        b1, b2 = self.b1, self.b2
+        c1 = 1.0 - b1 ** step.astype(jnp.float32)
+        c2 = 1.0 - b2 ** step.astype(jnp.float32)
+        dt = jnp.dtype(self.moment_dtype)
+
+        def upd(p, g, m, v):
+            gf = g.astype(jnp.float32)
+            mf = b1 * m.astype(jnp.float32) + (1 - b1) * gf
+            vf = b2 * v.astype(jnp.float32) + (1 - b2) * gf * gf
+            mhat = mf / c1
+            vhat = vf / c2
+            delta = mhat / (jnp.sqrt(vhat) + self.eps)
+            if p.ndim >= 2:  # decay matrices only (norms/bias exempt)
+                delta = delta + self.weight_decay * p.astype(jnp.float32)
+            new_p = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+            return new_p, mf.astype(dt), vf.astype(dt)
+
+        flat_p, treedef = jax.tree.flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_m = treedef.flatten_up_to(state.m)
+        flat_v = treedef.flatten_up_to(state.v)
+        out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+        new_params = treedef.unflatten([o[0] for o in out])
+        new_m = treedef.unflatten([o[1] for o in out])
+        new_v = treedef.unflatten([o[2] for o in out])
+        return new_params, AdamWState(step=step, m=new_m, v=new_v)

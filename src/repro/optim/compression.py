@@ -1,0 +1,55 @@
+"""Int8 error-feedback gradient compression for the slow (cross-pod) link.
+
+XLA gives no control over the wire format of ``psum``, so the compressed
+reduction is expressed structurally (DESIGN.md §5): quantize each shard to
+int8 against a pod-global scale (one scalar ``psum(max)``), ``all_gather``
+the **int8** payload over the pod axis (4× fewer bytes on the slowest link
+tier than an fp32 all-reduce leg), and reduce locally in int32. Quantization
+residue is carried in an error-feedback accumulator so the compression bias
+vanishes over steps (Seide et al.; 1-bit Adam lineage).
+
+Used by the train step only across the ``pod`` axis — intra-pod reductions
+stay fp32 (ICI is fast; the compression trade only pays on DCN/cross-pod).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["ErrorFeedbackInt8"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ErrorFeedbackInt8:
+    axis: str = "pod"
+
+    def init(self, params) -> Any:
+        return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+    def reduce_mean(self, grads, error):
+        """Inside shard_map/pjit with ``self.axis`` in scope: returns
+        (approx mean-reduced grads, new error state)."""
+        n = jax.lax.psum(1, self.axis)
+
+        def one(g, e):
+            gf = g.astype(jnp.float32) + e
+            scale = jax.lax.psum(jnp.max(jnp.abs(gf)), self.axis) / n
+            scale = jnp.maximum(scale, 1e-12) / 127.0
+            q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+            new_e = gf - q.astype(jnp.float32) * scale
+            gathered = jax.lax.all_gather(q, self.axis)  # int8 on the wire
+            mean = gathered.astype(jnp.int32).sum(axis=0).astype(jnp.float32)
+            mean = mean * scale / n
+            return mean.astype(g.dtype), new_e
+
+        flat_g, treedef = jax.tree.flatten(grads)
+        flat_e = treedef.flatten_up_to(error)
+        out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+        return (
+            treedef.unflatten([o[0] for o in out]),
+            treedef.unflatten([o[1] for o in out]),
+        )

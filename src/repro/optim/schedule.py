@@ -1,0 +1,26 @@
+"""Learning-rate schedules."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["warmup_cosine"]
+
+
+def warmup_cosine(
+    step,
+    *,
+    peak_lr: float,
+    warmup_steps: int,
+    total_steps: int,
+    final_fraction: float = 0.1,
+):
+    s = jnp.asarray(step, jnp.float32)
+    warm = peak_lr * s / jnp.maximum(warmup_steps, 1)
+    progress = jnp.clip(
+        (s - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0
+    )
+    cos = peak_lr * (
+        final_fraction + (1 - final_fraction) * 0.5 * (1 + jnp.cos(jnp.pi * progress))
+    )
+    return jnp.where(s < warmup_steps, warm, cos)

@@ -1,0 +1,13 @@
+# Distributed runtime: named-axis sharding rules (DP/TP/SP/EP), the train
+# step factory, elastic re-meshing, straggler monitoring, and the optional
+# pod-axis GPipe pipeline.
+
+from repro.runtime.sharding import (  # noqa: F401
+    ShardingRules,
+    batch_pspec,
+    make_activation_sharder,
+    param_pspecs,
+)
+from repro.runtime.steps import make_eval_step, make_train_step  # noqa: F401
+from repro.runtime.elastic import choose_submesh, plan_remesh  # noqa: F401
+from repro.runtime.straggler import StragglerMonitor  # noqa: F401

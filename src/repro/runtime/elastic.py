@@ -1,0 +1,69 @@
+"""Elastic scaling: re-mesh after node loss, resume from checkpoint.
+
+SPMD training cannot tolerate a missing participant mid-step; the sound
+recovery is (1) detect loss, (2) choose the largest valid submesh over the
+surviving devices, (3) restore the latest checkpoint *under the new mesh*
+(the per-leaf checkpoint format re-sharders transparently — restore targets
+carry the new NamedShardings), (4) rescale the data axis. The TP (model)
+degree is pinned — parameters are sharded to it and changing it mid-run
+would change per-op numerics and memory layout; elasticity happens on the
+data axes, which only changes gradient-batch partitioning (DESIGN.md §9).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+from jax.sharding import Mesh
+
+__all__ = ["choose_submesh", "plan_remesh", "RemeshPlan"]
+
+
+@dataclasses.dataclass(frozen=True)
+class RemeshPlan:
+    data: int
+    model: int
+    devices_used: int
+    devices_idle: int
+    global_batch_ratio: float  # new_data / old_data
+
+
+def choose_submesh(n_devices: int, *, model: int, max_data: int | None = None) -> tuple[int, int]:
+    """Largest (data, model) with data·model ≤ n_devices, model fixed."""
+    if n_devices < model:
+        raise ValueError(
+            f"cannot keep model axis {model} with only {n_devices} devices; "
+            "restore requires at least one full TP group"
+        )
+    data = n_devices // model
+    if max_data is not None:
+        data = min(data, max_data)
+    # Prefer powers of two on the data axis (collective-friendly rings).
+    p = 1
+    while p * 2 <= data:
+        p *= 2
+    return p, model
+
+
+def plan_remesh(
+    old_mesh_shape: tuple[int, int],
+    surviving_devices: int,
+) -> RemeshPlan:
+    old_data, model = old_mesh_shape
+    data, model = choose_submesh(surviving_devices, model=model)
+    return RemeshPlan(
+        data=data,
+        model=model,
+        devices_used=data * model,
+        devices_idle=surviving_devices - data * model,
+        global_batch_ratio=data / old_data,
+    )
+
+
+def build_mesh(devices: Sequence[jax.Device] | None, data: int, model: int) -> Mesh:
+    devs = list(devices if devices is not None else jax.devices())[: data * model]
+    import numpy as np
+
+    return Mesh(np.asarray(devs).reshape(data, model), ("data", "model"))

@@ -1,0 +1,77 @@
+"""Train / eval step factories.
+
+``make_train_step`` wires model loss → grad → clip → schedule → AdamW into
+one jit-able function with optional microbatch gradient accumulation
+(``accum > 1`` rescans the batch in slices — the activation-memory lever for
+the biggest configs). Buffer donation happens at the jit call site
+(launch/train.py) so params/opt-state update in place.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import Model
+from repro.optim.adamw import AdamW, AdamWState
+from repro.optim.clip import clip_by_global_norm
+
+__all__ = ["make_train_step", "make_eval_step"]
+
+
+def make_train_step(
+    model: Model,
+    optimizer: AdamW,
+    schedule: Callable[[jax.Array], jax.Array],
+    *,
+    clip_norm: float = 1.0,
+    accum: int = 1,
+):
+    def grads_of(params, batch):
+        (loss, metrics), grads = jax.value_and_grad(model.loss_fn, has_aux=True)(
+            params, batch
+        )
+        return loss, metrics, grads
+
+    def train_step(params, opt_state: AdamWState, batch) -> tuple[Any, AdamWState, dict]:
+        if accum == 1:
+            loss, metrics, grads = grads_of(params, batch)
+        else:
+            def slice_mb(i, leaf):
+                mb = leaf.shape[0] // accum
+                return jax.lax.dynamic_slice_in_dim(leaf, i * mb, mb, axis=0)
+
+            def body(carry, i):
+                gacc, lacc = carry
+                mb_batch = jax.tree.map(lambda l: slice_mb(i, l), batch)
+                loss, _, grads = grads_of(params, mb_batch)
+                gacc = jax.tree.map(jnp.add, gacc, grads)
+                return (gacc, lacc + loss), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            (gsum, lsum), _ = jax.lax.scan(
+                body, (zeros, jnp.float32(0)), jnp.arange(accum)
+            )
+            grads = jax.tree.map(lambda g: (g / accum).astype(jnp.float32), gsum)
+            loss = lsum / accum
+            metrics = {"loss": loss, "tokens": jnp.float32(0)}
+        grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        lr = schedule(opt_state.step)
+        new_params, new_opt = optimizer.update(grads, opt_state, params, lr)
+        metrics = dict(metrics)
+        metrics.update({"grad_norm": gnorm, "lr": lr})
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_eval_step(model: Model):
+    def eval_step(params, batch) -> dict:
+        loss, metrics = model.loss_fn(params, batch)
+        return metrics
+
+    return eval_step

@@ -1,0 +1,17 @@
+# Shared fixtures. NOTE: no XLA_FLAGS here — tests must see the real single
+# CPU device; multi-device tests spawn subprocesses (test_distributed.py).
+
+import numpy as np
+import pytest
+
+import jax
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture
+def key():
+    return jax.random.key(0)

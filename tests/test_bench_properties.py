@@ -1,0 +1,84 @@
+"""Hypothesis properties on the application benchmarks' invariants."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+_settings = settings(max_examples=15, deadline=None)
+
+
+@_settings
+@given(st.sampled_from(["53", "97"]), st.integers(3, 6), st.integers(0, 100))
+def test_dwt_perfect_reconstruction(mode, log_n, seed):
+    """inverse(forward(x)) == x for both wavelets, any even size."""
+    from repro.bench.level2.dwt2d import dwt2d
+
+    n = 2**log_n
+    rng = np.random.default_rng(seed)
+    img = jnp.asarray(rng.uniform(0, 255, (n, n)).astype(np.float32))
+    rec = dwt2d(dwt2d(img, mode=mode), mode=mode, inverse=True)
+    np.testing.assert_allclose(np.asarray(rec), np.asarray(img), rtol=1e-4, atol=1e-2)
+
+
+@_settings
+@given(st.floats(0.5, 2.0), st.floats(0.5, 2.0))
+def test_cfd_free_stream_preservation(rho, pressure):
+    """A uniform state is a fixed point of the Euler update (the standard
+    finite-volume sanity property)."""
+    from repro.bench.level2.cfd import GAMMA, euler_step
+
+    n = 8
+    u = jnp.concatenate(
+        [
+            jnp.full((1, n, n, n), rho),
+            jnp.zeros((3, n, n, n)),
+            jnp.full((1, n, n, n), pressure / (GAMMA - 1.0)),
+        ]
+    )
+    u2 = euler_step(u)
+    np.testing.assert_allclose(np.asarray(u2), np.asarray(u), rtol=1e-6, atol=1e-6)
+
+
+@_settings
+@given(st.integers(1, 200), st.floats(0.0, 0.4), st.floats(0.6, 1.0), st.integers(0, 99))
+def test_where_equals_boolean_filter(n, lo, hi, seed):
+    from repro.bench.level2.where import where_select
+
+    rng = np.random.default_rng(seed)
+    recs = jnp.asarray(rng.uniform(0, 1, (n, 3)).astype(np.float32))
+    out, count = where_select(recs, lo, hi)
+    r = np.asarray(recs)
+    want = r[(r[:, 0] > lo) & (r[:, 0] < hi)]
+    assert int(count) == want.shape[0]
+    np.testing.assert_allclose(np.asarray(out)[: int(count)], want, rtol=1e-6)
+    assert np.all(np.asarray(out)[int(count):] == 0.0)
+
+
+@_settings
+@given(st.integers(2, 64), st.integers(0, 50))
+def test_pathfinder_never_exceeds_straight_path(cols, seed):
+    """The min path is ≤ any single column's sum (a valid path)."""
+    from repro.bench.level1.pathfinder import pathfinder_min_path
+
+    rng = np.random.default_rng(seed)
+    grid = jnp.asarray(rng.integers(0, 10, (8, cols)).astype(np.int32))
+    dist = np.asarray(pathfinder_min_path(grid))
+    straight = np.asarray(grid).sum(axis=0)
+    assert np.all(dist <= straight)
+
+
+@_settings
+@given(st.integers(0, 30))
+def test_srad_preserves_positivity(seed):
+    """Diffusion of a positive image stays positive and finite."""
+    from repro.kernels.ref import srad_step_ref
+
+    rng = np.random.default_rng(seed)
+    img = jnp.asarray(np.exp(0.2 * rng.standard_normal((32, 32))).astype(np.float32))
+    out = img
+    for _ in range(5):
+        out = srad_step_ref(out)
+    o = np.asarray(out)
+    assert np.all(np.isfinite(o)) and np.all(o > 0)

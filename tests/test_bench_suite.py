@@ -1,0 +1,91 @@
+"""Suite infrastructure: registry (Table I), presets, harness, results."""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    all_benchmarks,
+    get_benchmark,
+    run_suite,
+    time_workload,
+)
+from repro.core.registry import DNN_DOMAIN, benchmarks_by_level
+
+
+def test_registry_covers_all_paper_sections():
+    names = {s.name for s in all_benchmarks()}
+    # Table I rows (our registry splits some into variants)
+    for required in (
+        "busspeeddownload", "busspeedreadback", "maxflops_bf16", "gups", "bfs",
+        "gemm_f32_nn", "pathfinder", "sort", "cfd", "dwt2d_53", "dwt2d_97",
+        "kmeans", "lavamd", "mandelbrot_flat", "mandelbrot_ms", "nw",
+        "particlefilter", "srad", "where", "activation", "pooling",
+        "batchnorm", "connected", "convolution_xla", "convolution_im2col",
+        "dropout", "rnn", "softmax", "lrn",
+    ):
+        assert required in names, f"missing Table I benchmark {required}"
+
+
+def test_levels_and_dnn_domain():
+    assert len(benchmarks_by_level(0)) >= 4
+    assert len(benchmarks_by_level(1)) >= 5
+    dnn = [s for s in benchmarks_by_level(2) if s.domain == DNN_DOMAIN]
+    assert len(dnn) >= 9  # the paper's 9 layer benchmarks
+
+
+def test_every_benchmark_has_five_presets():
+    for s in all_benchmarks():
+        assert set(s.presets) == {0, 1, 2, 3, 4}, s.name
+        # presets scale monotonically in at least one integer size parameter
+        szs = [
+            sum(v for v in s.presets[p].values() if isinstance(v, (int, float)))
+            for p in range(5)
+        ]
+        assert szs == sorted(szs), (s.name, szs)
+
+
+def test_preset_overrides_rodinia_style():
+    spec = get_benchmark("kmeans")
+    w = spec.build_preset(0, n=512, k=4)
+    assert "n512" in w.name and "k4" in w.name
+    with pytest.raises(TypeError):
+        spec.build_preset(0, bogus=1)
+    with pytest.raises(KeyError):
+        spec.build_preset(9)
+
+
+def test_dnn_benchmarks_have_backward():
+    for name in ("activation", "batchnorm", "connected", "softmax", "lrn", "rnn"):
+        w = get_benchmark(name).build_preset(0)
+        assert w.fn_bwd is not None, name
+        assert w.flops_bwd > 0
+
+
+@pytest.mark.parametrize(
+    "name", ["gups", "pathfinder", "where", "kmeans", "dwt2d_53", "nw"]
+)
+def test_benchmark_validates_at_preset0(name):
+    w = get_benchmark(name).build_preset(0)
+    t = time_workload(w, iters=1, warmup=0)
+    assert t.us_per_call > 0
+
+
+def test_run_suite_produces_records(tmp_path):
+    records = run_suite(
+        levels=(0,), names=["maxflops_bf16", "devicemem_stream"],
+        preset=0, iters=1, warmup=0, verbose=False,
+        report_path=str(tmp_path / "r.json"),
+    )
+    assert len(records) == 2
+    from repro.core.results import load_records
+
+    loaded = load_records(str(tmp_path / "r.json"))
+    assert [r.name for r in loaded] == [r.name for r in records]
+    assert all(0 <= r.compute_util10 <= 10 for r in records)
+
+
+def test_mandelbrot_adaptive_equals_flat():
+    w = get_benchmark("mandelbrot_ms").build_preset(0)
+    args = w.make_inputs(0)
+    out = w.fn(*args)
+    w.validate(out, args)  # validates against escape_time internally

@@ -1,0 +1,77 @@
+"""Checkpointer: roundtrip, keep-k, atomicity, bf16, async."""
+
+import os
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import Checkpointer
+
+
+def _payload(seed=0):
+    key = jax.random.key(seed)
+    return {
+        "params": {
+            "w": jax.random.normal(key, (8, 8), jnp.float32),
+            "b16": jax.random.normal(key, (4,), jnp.float32).astype(jnp.bfloat16),
+        },
+        "cursor": 17,
+        "nested": [jnp.arange(3), {"x": jnp.float32(2.5)}],
+    }
+
+
+def test_roundtrip_exact(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    payload = _payload()
+    ck.save(17, payload, blocking=True)
+    step, restored = ck.restore(payload)
+    assert step == 17
+    for a, b in zip(jax.tree.leaves(payload), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # bf16 dtype survives
+    assert restored["params"]["b16"].dtype == jnp.bfloat16 or str(
+        np.asarray(restored["params"]["b16"]).dtype
+    ) == "bfloat16"
+
+
+def test_keep_k_prunes_old(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=2)
+    for s in (1, 2, 3, 4):
+        ck.save(s, _payload(), blocking=True)
+    assert ck.all_steps() == [3, 4]
+
+
+def test_async_save_then_wait(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    ck.save(5, _payload(), blocking=False)
+    ck.wait()
+    assert ck.latest_step() == 5
+
+
+def test_partial_write_is_not_a_checkpoint(tmp_path):
+    """A crash mid-save leaves only a .tmp dir, never a corrupt step."""
+    ck = Checkpointer(str(tmp_path))
+    ck.save(1, _payload(), blocking=True)
+    # simulate a crashed writer
+    os.makedirs(tmp_path / ".tmp.99" )
+    (tmp_path / ".tmp.99" / "leaf_00000.bin").write_bytes(b"junk")
+    assert ck.all_steps() == [1]
+    step, _ = ck.restore(_payload())
+    assert step == 1
+
+
+def test_shape_mismatch_is_rejected(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    ck.save(1, {"w": jnp.zeros((4,))}, blocking=True)
+    with pytest.raises(ValueError, match="shape"):
+        ck.restore({"w": jnp.zeros((5,))})
+
+
+def test_missing_leaf_is_rejected(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    ck.save(1, {"w": jnp.zeros((4,))}, blocking=True)
+    with pytest.raises(KeyError):
+        ck.restore({"w": jnp.zeros((4,)), "extra": jnp.zeros((1,))})

@@ -1,0 +1,45 @@
+"""Pallas matmul kernel vs pure-jnp oracle: shape/dtype sweep."""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.matmul import matmul_pallas
+
+SHAPES = [
+    (8, 8, 8),
+    (128, 128, 128),
+    (130, 70, 50),  # padding in all dims
+    (1, 256, 33),
+    (257, 1, 128),
+]
+
+
+@pytest.mark.parametrize("m,k,n", SHAPES)
+@pytest.mark.parametrize("dtype", [np.float32, jnp.bfloat16])
+def test_matmul_matches_ref(rng, m, k, n, dtype):
+    a = jnp.asarray(rng.normal(size=(m, k)).astype(np.float32)).astype(dtype)
+    b = jnp.asarray(rng.normal(size=(k, n)).astype(np.float32)).astype(dtype)
+    out = matmul_pallas(a, b, block_m=64, block_n=64, block_k=32, interpret=True)
+    want = ref.matmul_ref(a, b)
+    tol = 1e-5 if dtype == np.float32 else 2e-2
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(want, np.float32), rtol=tol, atol=tol
+    )
+
+
+def test_matmul_block_shapes_invariance(rng):
+    """Result is independent of BlockSpec tiling."""
+    a = jnp.asarray(rng.normal(size=(96, 64)).astype(np.float32))
+    b = jnp.asarray(rng.normal(size=(64, 80)).astype(np.float32))
+    outs = [
+        matmul_pallas(a, b, block_m=bm, block_n=bn, block_k=bk, interpret=True)
+        for bm, bn, bk in [(32, 16, 16), (96, 80, 64), (48, 40, 8)]
+    ]
+    for o in outs[1:]:
+        # fp32 accumulation order differs across tilings — tolerance only.
+        np.testing.assert_allclose(
+            np.asarray(outs[0]), np.asarray(o), rtol=1e-3, atol=1e-5
+        )

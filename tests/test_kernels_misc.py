@@ -1,0 +1,78 @@
+"""Softmax / LRN / avgpool / SRAD / prefix-scan / bitonic-sort kernels vs oracles."""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.avgpool import avgpool_pallas
+from repro.kernels.bitonic_sort import bitonic_sort_pallas
+from repro.kernels.lrn import lrn_pallas
+from repro.kernels.prefix_scan import prefix_scan_pallas
+from repro.kernels.softmax import softmax_pallas
+from repro.kernels.srad_stencil import srad_step_fused, srad_step_split
+
+
+@pytest.mark.parametrize("rows,cols", [(1, 8), (33, 257), (64, 64), (7, 1031)])
+@pytest.mark.parametrize("dtype", [np.float32, jnp.bfloat16])
+def test_softmax(rng, rows, cols, dtype):
+    x = (5 * jnp.asarray(rng.normal(size=(rows, cols)).astype(np.float32))).astype(dtype)
+    out = softmax_pallas(x, block_rows=16, block_cols=64, interpret=True)
+    want = ref.softmax_ref(x)
+    tol = 1e-5 if dtype == np.float32 else 2e-2
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(want, np.float32), rtol=tol, atol=tol
+    )
+
+
+@pytest.mark.parametrize("n,c,h,w", [(1, 5, 4, 4), (2, 13, 9, 11), (3, 64, 8, 8)])
+@pytest.mark.parametrize("size", [3, 5])
+def test_lrn(rng, n, c, h, w, size):
+    x = jnp.asarray(rng.normal(size=(n, c, h, w)).astype(np.float32))
+    out = lrn_pallas(x, size=size, block_s=16, interpret=True)
+    want = ref.lrn_ref(x, size=size)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("shape,ks", [((1, 3, 4, 4), 2), ((2, 5, 8, 12), 2), ((1, 8, 9, 9), 3)])
+def test_avgpool(rng, shape, ks):
+    x = jnp.asarray(rng.normal(size=shape).astype(np.float32))
+    out = avgpool_pallas(x, ksize=ks, block_c=4, interpret=True)
+    want = ref.avgpool_ref(x, ksize=ks)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("h,w", [(8, 8), (32, 48), (65, 33)])
+def test_srad_fused_and_split(rng, h, w):
+    img = jnp.asarray(rng.uniform(0.2, 1.0, size=(h, w)).astype(np.float32))
+    want = ref.srad_step_ref(img)
+    for fn in (srad_step_fused, srad_step_split):
+        out = fn(img, interpret=True)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("n,bn", [(8, 8), (1000, 128), (4096, 512), (5, 3)])
+def test_prefix_scan(rng, n, bn):
+    x = jnp.asarray(rng.normal(size=(n,)).astype(np.float32))
+    out = prefix_scan_pallas(x, block_n=bn, interpret=True)
+    want = ref.prefix_scan_ref(x)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("n", [2, 8, 64, 1024])
+def test_bitonic_sort(rng, n):
+    keys = jnp.asarray(rng.integers(0, 1 << 20, n).astype(np.int32))
+    vals = jnp.arange(n, dtype=jnp.int32)
+    ko, vo = bitonic_sort_pallas(keys, vals, interpret=True)
+    rk, rv = ref.sort_kv_ref(keys, vals)
+    np.testing.assert_array_equal(np.asarray(ko), np.asarray(rk))
+    # Same pairing: keys[vo] == ko
+    np.testing.assert_array_equal(np.asarray(keys)[np.asarray(vo)], np.asarray(ko))
+
+
+def test_bitonic_sort_floats(rng):
+    keys = jnp.asarray(rng.normal(size=(256,)).astype(np.float32))
+    vals = jnp.arange(256, dtype=jnp.int32)
+    ko, vo = bitonic_sort_pallas(keys, vals, interpret=True)
+    assert np.all(np.diff(np.asarray(ko)) >= 0)

@@ -1,0 +1,135 @@
+"""Hypothesis property tests on system invariants."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.bitonic_sort import bitonic_sort_pallas
+from repro.kernels.prefix_scan import prefix_scan_pallas
+from repro.kernels.softmax import softmax_pallas
+
+_settings = settings(max_examples=20, deadline=None)
+
+floats = st.floats(-100, 100, allow_nan=False, width=32)
+
+
+@_settings
+@given(st.lists(floats, min_size=1, max_size=200), st.integers(1, 64))
+def test_prefix_scan_equals_cumsum(xs, bn):
+    x = jnp.asarray(np.array(xs, np.float32))
+    out = prefix_scan_pallas(x, block_n=bn, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.cumsum(xs, dtype=np.float32),
+                               rtol=1e-4, atol=1e-3)
+
+
+@_settings
+@given(st.integers(0, 6).flatmap(
+    lambda p: st.lists(st.integers(-(1 << 20), 1 << 20), min_size=2**p, max_size=2**p)
+))
+def test_bitonic_sort_is_sorted_permutation(keys):
+    k = jnp.asarray(np.array(keys, np.int32))
+    v = jnp.arange(len(keys), dtype=jnp.int32)
+    ko, vo = bitonic_sort_pallas(k, v, interpret=True)
+    ko, vo = np.asarray(ko), np.asarray(vo)
+    assert np.all(np.diff(ko) >= 0)
+    assert sorted(vo.tolist()) == list(range(len(keys)))  # permutation
+    np.testing.assert_array_equal(np.array(keys)[vo], ko)  # pairing
+
+
+@_settings
+@given(
+    st.integers(1, 8), st.integers(1, 40),
+    st.floats(-5, 5, allow_nan=False, width=32),
+)
+def test_softmax_simplex_and_shift_invariance(rows, cols, shift):
+    rng = np.random.default_rng(42)
+    x = jnp.asarray(rng.normal(size=(rows, cols)).astype(np.float32) * 3)
+    out = softmax_pallas(x, block_rows=8, block_cols=16, interpret=True)
+    o = np.asarray(out)
+    np.testing.assert_allclose(o.sum(-1), 1.0, rtol=1e-5)
+    assert np.all(o >= 0)
+    out2 = softmax_pallas(x + shift, block_rows=8, block_cols=16, interpret=True)
+    np.testing.assert_allclose(o, np.asarray(out2), rtol=1e-4, atol=1e-5)
+
+
+@_settings
+@given(st.integers(1, 4), st.integers(2, 16), st.integers(8, 32))
+def test_rope_preserves_norm(b, t, half_pairs):
+    """Rotary embedding is a rotation: per-pair norms are invariant."""
+    from repro.models.config import ArchConfig
+    from repro.models.layers import apply_rope, rope_angles
+
+    hd = 2 * half_pairs
+    cfg = ArchConfig(
+        name="t", family="dense", n_layers=2, d_model=hd, n_heads=1,
+        n_kv_heads=1, head_dim=hd, d_ff=8, vocab=16,
+    )
+    rng = np.random.default_rng(7)
+    x = jnp.asarray(rng.normal(size=(b, t, 1, hd)).astype(np.float32))
+    pos = jnp.broadcast_to(jnp.arange(t)[None], (b, t))
+    cos, sin = rope_angles(cfg, pos)
+    y = apply_rope(x, cos, sin)
+    # pairwise (i, i+half) norms preserved
+    nx = np.asarray(x[..., :half_pairs] ** 2 + x[..., half_pairs:] ** 2)
+    ny = np.asarray(y[..., :half_pairs] ** 2 + y[..., half_pairs:] ** 2)
+    np.testing.assert_allclose(nx, ny, rtol=1e-4, atol=1e-4)
+
+
+@_settings
+@given(st.integers(2, 6), st.integers(1, 3), st.integers(1, 4))
+def test_moe_routing_mass_conservation(n_experts, top_k, groups):
+    """Router combine weights sum to 1 per token (before capacity drops)."""
+    from repro.models.moe import _route
+
+    top_k = min(top_k, n_experts)
+    rng = np.random.default_rng(3)
+    logits = jnp.asarray(rng.normal(size=(groups * 8, n_experts)).astype(np.float32))
+    w = _route(logits, top_k)
+    wn = np.asarray(w)
+    np.testing.assert_allclose(wn.sum(-1), 1.0, rtol=1e-5)
+    assert np.all((wn > 0).sum(-1) <= top_k)
+
+
+@_settings
+@given(st.integers(1, 30), st.integers(1, 30))
+def test_nw_score_vs_oracle(n_prefix, seed):
+    from repro.bench.level2.nw import nw_oracle, nw_score
+
+    rng = np.random.default_rng(seed)
+    n = max(2, n_prefix)
+    a = rng.integers(0, 4, n).astype(np.int32)
+    b = rng.integers(0, 4, n).astype(np.int32)
+    got = int(nw_score(jnp.asarray(a), jnp.asarray(b)))
+    assert got == nw_oracle(a, b)
+
+
+@_settings
+@given(st.integers(0, 1000))
+def test_synthetic_data_deterministic(step):
+    from repro.data import SyntheticLM
+
+    d = SyntheticLM(vocab=64, batch=2, seq=8, seed=1)
+    b1, b2 = d.batch_at(step), d.batch_at(step)
+    np.testing.assert_array_equal(np.asarray(b1["tokens"]), np.asarray(b2["tokens"]))
+    # labels are next-token shifted
+    d2 = SyntheticLM(vocab=64, batch=2, seq=8, seed=2)
+    assert not np.array_equal(
+        np.asarray(d.batch_at(step)["tokens"]), np.asarray(d2.batch_at(step)["tokens"])
+    ) or step < 0
+
+
+@_settings
+@given(st.floats(0.1, 10, allow_nan=False), st.integers(1, 50))
+def test_adamw_converges_on_quadratic(scale, steps):
+    from repro.optim import AdamW
+
+    opt = AdamW(weight_decay=0.0)
+    p = {"w": jnp.asarray([float(scale)])}
+    s = opt.init(p)
+    for _ in range(steps):
+        g = {"w": 2 * p["w"]}  # d/dw w²
+        p, s = opt.update(g, s, p, lr=0.1)
+    assert abs(float(p["w"][0])) <= scale + 1e-6

@@ -1,0 +1,114 @@
+"""Runtime: sharding rules, elastic planning, straggler policy."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCHS, get_config, get_smoke_config
+from repro.models import Model
+from repro.runtime.elastic import choose_submesh, plan_remesh
+from repro.runtime.sharding import ShardingRules, param_pspecs, zero_pspecs
+from repro.runtime.straggler import StragglerMonitor
+
+
+class _FakeMesh:
+    """Shape-only stand-in so sharding rules are testable on 1 device."""
+
+    def __init__(self, shape: dict):
+        self.shape = shape
+
+
+def _rules(data=16, model=16):
+    return ShardingRules(mesh=_FakeMesh({"data": data, "model": model}))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_param_specs_are_valid_for_full_configs(arch):
+    """Every full-config param leaf gets a spec whose sharded dims divide."""
+    cfg = get_config(arch)
+    model = Model(cfg, remat=False)
+    params = jax.eval_shape(model.init, jax.random.key(0))
+    rules = _rules()
+    specs = param_pspecs(params, rules)
+    flat_p = jax.tree.leaves(params)
+    flat_s = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+    assert len(flat_p) == len(flat_s)
+    n_sharded = 0
+    for leaf, spec in zip(flat_p, flat_s):
+        for i, axis in enumerate(spec):
+            if axis == "model":
+                assert leaf.shape[i] % 16 == 0, (leaf.shape, spec)
+                n_sharded += 1
+    # The big tensors must actually shard: >50% of parameter BYTES.
+    sharded_bytes = sum(
+        np.prod(l.shape) for l, s in zip(flat_p, flat_s) if any(a == "model" for a in s)
+    )
+    total = sum(np.prod(l.shape) for l in flat_p)
+    assert sharded_bytes / total > 0.95, f"{arch}: only {sharded_bytes/total:.2%} sharded"
+
+
+def test_mixtral_experts_fall_back_to_ff_sharding():
+    """8 experts don't divide the 16-way model axis → d_ff sharding."""
+    cfg = get_config("mixtral-8x22b")
+    model = Model(cfg, remat=False)
+    params = jax.eval_shape(model.init, jax.random.key(0))
+    specs = param_pspecs(params, _rules())
+    moe_spec = specs["blocks"][0]["ffn"]["w_gate"]
+    # stacked leaf: (periods, E=8, d, ff) → model axis on ff (dim 3)
+    assert tuple(moe_spec) == (None, None, None, "model")
+
+
+def test_dbrx_experts_use_expert_parallelism():
+    cfg = get_config("dbrx-132b")
+    model = Model(cfg, remat=False)
+    params = jax.eval_shape(model.init, jax.random.key(0))
+    specs = param_pspecs(params, _rules())
+    moe_spec = specs["blocks"][0]["ffn"]["w_gate"]
+    # 16 experts divide 16 → EP on the expert dim
+    assert tuple(moe_spec) == (None, "model", None, None)
+
+
+def test_zero_pspecs_add_data_axis():
+    cfg = get_smoke_config("granite-8b")
+    model = Model(cfg, remat=False)
+    params = jax.eval_shape(model.init, jax.random.key(0))
+    rules = ShardingRules(mesh=_FakeMesh({"data": 2, "model": 2}))
+    base = param_pspecs(params, rules)
+    z = zero_pspecs(base, params, rules)
+    flat_b = jax.tree.leaves(base, is_leaf=lambda x: isinstance(x, P))
+    flat_z = jax.tree.leaves(z, is_leaf=lambda x: isinstance(x, P))
+    extended = sum(
+        1 for b, zz in zip(flat_b, flat_z)
+        if sum(a is not None for a in zz) > sum(a is not None for a in b)
+    )
+    assert extended > 0
+
+
+def test_choose_submesh():
+    assert choose_submesh(256, model=16) == (16, 16)
+    assert choose_submesh(255, model=16) == (8, 16)  # lost one chip → 2^k data
+    assert choose_submesh(17, model=16) == (1, 16)
+    with pytest.raises(ValueError):
+        choose_submesh(15, model=16)
+
+
+def test_plan_remesh_reports_ratio():
+    plan = plan_remesh((16, 16), 240)
+    assert plan.model == 16 and plan.data == 8
+    assert plan.global_batch_ratio == 0.5
+    assert plan.devices_idle == 240 - 128
+
+
+def test_straggler_monitor_flags_sustained_only():
+    mon = StragglerMonitor(threshold=1.5, sustained=3)
+    for _ in range(20):
+        assert not mon.record(1.0)
+    assert not mon.record(3.0)  # one-off spike
+    assert not mon.record(3.0)
+    assert mon.record(3.0)  # third consecutive → trigger
+    assert mon.triggered == 1
+    # baseline must not have drifted up from slow steps
+    assert mon.baseline < 1.1
