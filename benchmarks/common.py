@@ -13,6 +13,25 @@ DRYRUN_DIR = os.path.join(ARTIFACT_DIR, "dryrun")
 
 Row = tuple[str, float, str]
 
+# Derived-field prefix marking a per-benchmark failure row (the engine's
+# fault isolation); run.py counts these toward its exit code.
+ERROR_PREFIX = "error="
+
 
 def fmt(rows: list[Row]) -> list[str]:
     return [f"{n},{us:.2f},{d}" for n, us, d in rows]
+
+
+def record_rows(tag, records, derive) -> list[Row]:
+    """Format suite records as figure rows, surfacing error records.
+
+    ``derive(record) -> str`` builds the derived field for ok records;
+    error records become explicit ``error=...`` rows instead of fake zeros.
+    """
+    out: list[Row] = []
+    for r in records:
+        if r.status != "ok":
+            out.append((f"{tag}.{r.name}", 0.0, f"{ERROR_PREFIX}{r.error};{r.derived}"))
+        else:
+            out.append((f"{tag}.{r.name}", r.us_per_call, derive(r)))
+    return out

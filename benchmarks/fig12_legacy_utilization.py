@@ -4,7 +4,7 @@ against Rodinia's flat profile."""
 
 from __future__ import annotations
 
-from benchmarks.common import Row
+from benchmarks.common import Row, record_rows
 from repro.core import run_suite
 
 
@@ -13,12 +13,11 @@ def rows(preset: int = 0) -> list[Row]:
         levels=(0, 1), preset=preset, iters=3, warmup=1,
         include_backward=False, verbose=False,
     )
-    return [
-        (
-            f"fig12.{r.name}",
-            r.us_per_call,
+    return record_rows(
+        "fig12",
+        records,
+        lambda r: (
             f"compute10={r.compute_util10};memory10={r.memory_util10};"
-            f"dominant={r.dominant};gbps={r.achieved_gbps:.2f}",
-        )
-        for r in records
-    ]
+            f"dominant={r.dominant};gbps={r.achieved_gbps:.2f}"
+        ),
+    )

@@ -2,7 +2,7 @@
 
 from __future__ import annotations
 
-from benchmarks.common import Row
+from benchmarks.common import Row, record_rows
 from repro.core import run_suite
 
 DNN = [
@@ -17,16 +17,19 @@ def rows(preset: int = 0, backward: bool = False) -> list[Row]:
         include_backward=backward, verbose=False,
     )
     tag = "fig4" if backward else "fig3"
-    out = []
-    for r in records:
-        if backward != r.name.endswith(".bwd"):
-            continue
-        out.append(
-            (
-                f"{tag}.{r.name}",
-                r.us_per_call,
-                f"compute10={r.compute_util10};memory10={r.memory_util10};"
-                f"dominant={r.dominant};gflops={r.achieved_gflops:.2f}",
-            )
-        )
-    return out
+    # Keep the pass this figure covers — but always keep error records (a
+    # build/compile failure has no .bwd row, and hiding it would fake a
+    # clean section).
+    records = [
+        r
+        for r in records
+        if backward == r.name.endswith(".bwd") or r.status != "ok"
+    ]
+    return record_rows(
+        tag,
+        records,
+        lambda r: (
+            f"compute10={r.compute_util10};memory10={r.memory_util10};"
+            f"dominant={r.dominant};gflops={r.achieved_gflops:.2f}"
+        ),
+    )

@@ -8,7 +8,7 @@ methodology (DESIGN.md §2).
 
 from __future__ import annotations
 
-from benchmarks.common import Row
+from benchmarks.common import Row, record_rows
 from repro.core import run_suite
 
 _LEVEL2 = [
@@ -22,12 +22,11 @@ def rows(preset: int = 0) -> list[Row]:
         names=_LEVEL2, preset=preset, iters=3, warmup=1,
         include_backward=False, verbose=False,
     )
-    return [
-        (
-            f"fig5.{r.name}",
-            r.us_per_call,
+    return record_rows(
+        "fig5",
+        records,
+        lambda r: (
             f"compute10={r.compute_util10};memory10={r.memory_util10};"
-            f"dominant={r.dominant};gflops={r.achieved_gflops:.2f}",
-        )
-        for r in records
-    ]
+            f"dominant={r.dominant};gflops={r.achieved_gflops:.2f}"
+        ),
+    )

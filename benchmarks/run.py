@@ -8,23 +8,54 @@ Prints ``name,us_per_call,derived`` CSV. Sections:
   table2   — per-layer kernel classification (Table II)
   feat_*   — §V-B modern-feature studies (HyperQ / UM / CG / DP analogues)
   roofline — §Roofline table from the multi-pod dry-run artifacts
+
+Suite-backed sections (fig12/3/4/5) run through the staged engine via
+``run_suite``: one shared compile cache across sections (fig4 reuses fig3's
+builds) and per-benchmark fault isolation inside each section. The
+try/except here is only a last-resort guard for the non-suite sections.
 """
 
 from __future__ import annotations
 
 import argparse
+import os
 import sys
 import time
 import traceback
+
+if __package__ in (None, ""):  # `python benchmarks/run.py` (vs -m benchmarks.run)
+    sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+SECTION_NAMES = (
+    "table1",
+    "fig12",
+    "fig3",
+    "fig4",
+    "fig5",
+    "table2",
+    "feat_hyperq",
+    "feat_unified_memory",
+    "feat_coop_groups",
+    "feat_dynamic_parallelism",
+    "roofline",
+)
 
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--sections", nargs="*", default=None,
-                    help="subset of sections to run")
+                    help=f"subset of sections to run; valid: {', '.join(SECTION_NAMES)}")
     ap.add_argument("--preset", type=int, default=0)
     args = ap.parse_args(argv)
 
+    selected = args.sections or list(SECTION_NAMES)
+    unknown = [s for s in selected if s not in SECTION_NAMES]
+    if unknown:
+        print(f"unknown section(s): {', '.join(unknown)}", file=sys.stderr)
+        print(f"valid sections: {', '.join(SECTION_NAMES)}", file=sys.stderr)
+        return 2
+
+    # Imported after validation so a bad --sections fails fast, before jax.
     from benchmarks import (
         feat_coop_groups,
         feat_dynamic_parallelism,
@@ -53,13 +84,20 @@ def main(argv=None) -> int:
         "roofline": lambda: roofline_table.rows("single")
         + roofline_table.rows("multi"),
     }
-    selected = args.sections or list(sections)
+    # SECTION_NAMES exists so --sections validates before the jax imports
+    # above; keep the two in sync.
+    assert set(sections) == set(SECTION_NAMES), "update SECTION_NAMES"
+    from benchmarks.common import ERROR_PREFIX
+
     print("name,us_per_call,derived")
     failures = 0
     for name in selected:
         t0 = time.time()
         try:
             for n, us, d in sections[name]():
+                if d.startswith(ERROR_PREFIX):  # engine fault-isolated row
+                    failures += 1
+                    print(f"# ERROR {n}: {d}", file=sys.stderr, flush=True)
                 print(f"{n},{us:.2f},{d}", flush=True)
         except Exception:  # noqa: BLE001
             failures += 1

@@ -10,8 +10,9 @@ that convolution lands compute-dominant and batchnorm memory-dominant.
 from __future__ import annotations
 
 from benchmarks.common import Row
-from repro.core import compile_workload
+from repro.core import ExecutionPlan
 from repro.core.registry import get_benchmark
+from repro.core.suite import DEFAULT_ENGINE
 
 _KERNEL_MAP = {
     "activation": ("xla:relu-fusion", "elementwise"),
@@ -28,13 +29,17 @@ _KERNEL_MAP = {
 
 
 def rows(preset: int = 1) -> list[Row]:
+    # Characterize-only flow through the shared engine: compiled executables
+    # are cached alongside the fig3/fig4 runs of the same preset.
+    plan = ExecutionPlan(preset=preset)
     out: list[Row] = []
     for name, (kernel, kind) in _KERNEL_MAP.items():
-        w = get_benchmark(name).build_preset(preset)
+        spec = get_benchmark(name)
+        w = spec.build_preset(plan.resolve_preset(spec))
         for backward in (False, True):
             if backward and w.fn_bwd is None:
                 continue
-            info = compile_workload(w, backward=backward)
+            info = DEFAULT_ENGINE.characterize(spec, plan, backward=backward, workload=w)
             r = info.roofline
             out.append(
                 (

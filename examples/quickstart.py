@@ -19,6 +19,9 @@ def main() -> None:
         preset=0, iters=3, warmup=1, verbose=False,
     )
     for r in records:
+        if r.status != "ok":
+            print(f"  {r.name:<28} ERROR: {r.error}")
+            continue
         print(
             f"  {r.name:<28} {r.us_per_call:>10.1f} us  "
             f"compute|{'#' * r.compute_util10:<10}| memory|{'#' * r.memory_util10:<10}|"

@@ -2,16 +2,20 @@
 
 Level 0 microbenchmarks through the DNN section (forward + backward), with
 SHOC-style presets and Rodinia-style overrides, producing the utilization
-table + a JSON report.
+table + a JSON report. Runs through the staged engine (build → compile →
+measure → characterize → report): each workload is compiled exactly once
+per pass, failures are isolated per benchmark, and ``--jsonl`` streams
+records (with run metadata) as they finish.
 
 Usage:
   PYTHONPATH=src python examples/run_suite.py [--preset 0..4] [--levels 0 1 2]
   PYTHONPATH=src python examples/run_suite.py --names kmeans srad --preset 2
+  PYTHONPATH=src python examples/run_suite.py --jsonl artifacts/suite.jsonl
 """
 
 import argparse
 
-from repro.core import run_suite
+from repro.core import Engine, ExecutionPlan
 from repro.core.results import to_csv_lines
 
 
@@ -21,20 +25,38 @@ def main() -> None:
     ap.add_argument("--levels", type=int, nargs="*", default=[0, 1, 2])
     ap.add_argument("--names", nargs="*", default=None)
     ap.add_argument("--report", default="artifacts/suite_report.json")
+    ap.add_argument("--jsonl", default=None, help="streaming JSONL report path")
     ap.add_argument("--iters", type=int, default=5)
+    ap.add_argument("--devices", type=int, default=1,
+                    help="replicate inputs over the first N devices")
     args = ap.parse_args()
-    records = run_suite(
-        levels=tuple(args.levels), names=args.names, preset=args.preset,
-        iters=args.iters, warmup=2, report_path=args.report, verbose=False,
+    plan = ExecutionPlan(
+        levels=tuple(args.levels),
+        names=tuple(args.names) if args.names else None,
+        preset=args.preset,
+        iters=args.iters,
+        warmup=2,
+        devices=args.devices,
     )
+    engine = Engine()
+    result = engine.run(plan, report_path=args.report, jsonl_path=args.jsonl)
     print(f"{'benchmark':<34}{'us/call':>12}  {'compute':<12}{'memory':<12}dominant")
-    for r in records:
+    for r in result.records:
+        if r.status != "ok":
+            print(f"{r.name:<34}{'ERROR':>12}  {r.error[:60]}")
+            continue
         print(
             f"{r.name:<34}{r.us_per_call:>12.1f}  "
             f"|{'#' * r.compute_util10:<10}| |{'#' * r.memory_util10:<10}| {r.dominant}"
         )
-    print(f"\n{len(records)} rows; report: {args.report}")
-    for line in to_csv_lines(records)[:5]:
+    meta = result.metadata
+    print(
+        f"\n{len(result.records)} rows ({len(result.error_records)} errors); "
+        f"backend={meta.backend} devices={meta.devices}/{meta.device_count} "
+        f"compiles={engine.cache.misses} cache_hits={engine.cache.hits}; "
+        f"report: {args.report}" + (f" jsonl: {args.jsonl}" if args.jsonl else "")
+    )
+    for line in to_csv_lines(result.records)[:5]:
         print(line)
 
 

@@ -20,5 +20,15 @@ from repro.core.metrics import (  # noqa: F401
     roofline_terms,
     utilization_scale10,
 )
-from repro.core.results import BenchmarkRecord, to_csv_lines, write_report  # noqa: F401
+from repro.core.results import (  # noqa: F401
+    BenchmarkRecord,
+    JsonlReportWriter,
+    RunMetadata,
+    load_records,
+    load_run,
+    to_csv_lines,
+    write_report,
+)
+from repro.core.plan import ExecutionPlan  # noqa: F401
+from repro.core.engine import CompileCache, Engine, RunResult  # noqa: F401
 from repro.core.suite import run_suite  # noqa: F401

@@ -1,0 +1,315 @@
+"""Staged execution engine: build → compile → measure → characterize → report.
+
+The imperative half of the plan/engine split (``core/plan.py`` holds the
+declarative half). For every selected benchmark the engine runs the stages:
+
+- **build**: instantiate the workload from the spec at the plan's preset
+  (plus Rodinia-style overrides) and materialize its inputs; with
+  ``plan.devices > 1`` inputs are replicated onto a data mesh
+  (``runtime/sharding.data_mesh`` / ``replicate``) before compilation.
+- **compile**: lower + compile through an in-process cache keyed on
+  ``(name, preset, overrides, backward, backend, devices)`` so each
+  workload is compiled **exactly once per pass** — the same executable
+  feeds both the timer and the static analysis (the seed compiled twice:
+  once in ``time_workload``, again in ``compile_workload``).
+- **measure**: validate the first output, then time the compiled
+  executable (``harness.time_fn``).
+- **characterize**: static cost/memory/roofline analysis of the cached
+  executable, computed once and memoized alongside it.
+- **report**: a :class:`BenchmarkRecord`, streamed to the JSONL writer as
+  it is produced.
+
+Failures are isolated per benchmark: an exception in any stage yields an
+``status="error"`` record naming the stage and the suite keeps going.
+
+Adding a stage = add an ``_stage_name`` method, call it in ``_run_pass``
+between its neighbours, and extend the record (see ROADMAP.md §Execution
+engine).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+
+from repro.core.harness import (
+    CompiledInfo,
+    characterize_compiled,
+    empty_compiled_info,
+    time_fn,
+    timing_from_stats,
+)
+from repro.core.plan import ExecutionPlan
+from repro.core.registry import BenchmarkSpec, Workload
+from repro.core.results import (
+    BenchmarkRecord,
+    JsonlReportWriter,
+    RunMetadata,
+    write_report,
+)
+
+__all__ = ["CompileCache", "Engine", "RunResult"]
+
+# (name, preset, frozen-overrides, backward, backend, devices)
+CacheKey = tuple[str, int, tuple, bool, str, int]
+
+
+@dataclasses.dataclass
+class _CacheEntry:
+    executable: Callable[..., Any]
+    info: CompiledInfo | None = None  # memoized by the characterize stage
+
+
+class CompileCache:
+    """In-process compiled-executable cache with hit/miss counters."""
+
+    def __init__(self) -> None:
+        self._entries: dict[CacheKey, _CacheEntry] = {}
+        self.hits = 0
+        self.misses = 0
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def peek(self, key: CacheKey) -> _CacheEntry | None:
+        """Lookup without counting a hit (callers count on actual use)."""
+        return self._entries.get(key)
+
+    def lookup(self, key: CacheKey, build: Callable[[], _CacheEntry]) -> _CacheEntry:
+        entry = self._entries.get(key)
+        if entry is not None:
+            self.hits += 1
+            return entry
+        # Count the miss only after a successful build so a failing compile
+        # retried later is not double-counted as two compilations.
+        entry = build()
+        self.misses += 1
+        self._entries[key] = entry
+        return entry
+
+    def clear(self) -> None:
+        self._entries.clear()
+
+
+@dataclasses.dataclass
+class RunResult:
+    records: list[BenchmarkRecord]
+    metadata: RunMetadata
+    cache: CompileCache
+
+    @property
+    def ok_records(self) -> list[BenchmarkRecord]:
+        return [r for r in self.records if r.status == "ok"]
+
+    @property
+    def error_records(self) -> list[BenchmarkRecord]:
+        return [r for r in self.records if r.status != "ok"]
+
+
+class Engine:
+    """Executes plans. Holds the compile cache, so a long-lived engine
+
+    (e.g. the module-level one behind ``run_suite``) reuses executables
+    across runs, sections, and figure drivers within one process.
+    """
+
+    def __init__(self, cache: CompileCache | None = None) -> None:
+        self.cache = cache if cache is not None else CompileCache()
+
+    # -- stages ------------------------------------------------------------
+
+    def _cache_key(
+        self, spec: BenchmarkSpec, plan: ExecutionPlan, preset: int, backward: bool
+    ) -> CacheKey:
+        return (
+            spec.name,
+            preset,
+            tuple(sorted(plan.overrides_for(spec.name).items())),
+            backward,
+            jax.default_backend(),
+            plan.devices,
+        )
+
+    def _stage_build(
+        self, spec: BenchmarkSpec, plan: ExecutionPlan, preset: int
+    ) -> tuple[Workload, tuple]:
+        workload = spec.build_preset(preset, **plan.overrides_for(spec.name))
+        return workload, self._make_args(workload, plan)
+
+    def _make_args(self, workload: Workload, plan: ExecutionPlan) -> tuple:
+        args = workload.make_inputs(plan.seed)
+        if plan.devices > 1 and not workload.meta.get("no_jit"):
+            from repro.runtime.sharding import data_mesh, replicate
+
+            args = replicate(args, data_mesh(plan.devices))
+        return args
+
+    def _stage_compile(
+        self,
+        spec: BenchmarkSpec,
+        workload: Workload,
+        args: tuple,
+        plan: ExecutionPlan,
+        preset: int,
+        backward: bool,
+    ) -> _CacheEntry:
+        fn = workload.fn_bwd if backward else workload.fn
+        if backward and fn is None:
+            raise ValueError(f"workload {workload.name!r} has no backward pass")
+        key = self._cache_key(spec, plan, preset, backward)
+
+        def build() -> _CacheEntry:
+            if workload.meta.get("no_jit"):
+                # Host-transfer workloads time the un-jitted staging path and
+                # have no device program to analyse.
+                return _CacheEntry(
+                    executable=fn,
+                    info=empty_compiled_info(_pass_name(workload, backward)),
+                )
+            return _CacheEntry(executable=jax.jit(fn).lower(*args).compile())
+
+        return self.cache.lookup(key, build)
+
+    def _stage_measure(
+        self,
+        workload: Workload,
+        entry: _CacheEntry,
+        args: tuple,
+        plan: ExecutionPlan,
+        backward: bool,
+    ):
+        out = jax.block_until_ready(entry.executable(*args))
+        if not backward and workload.validate is not None:
+            workload.validate(out, args)
+        mean, stdev = time_fn(
+            entry.executable, args, iters=plan.iters, warmup=plan.warmup
+        )
+        return timing_from_stats(
+            workload, mean_us=mean, stdev_us=stdev, iters=plan.iters, backward=backward
+        )
+
+    def _stage_characterize(
+        self, workload: Workload, entry: _CacheEntry, backward: bool
+    ) -> CompiledInfo:
+        if entry.info is None:
+            entry.info = characterize_compiled(
+                entry.executable, _pass_name(workload, backward)
+            )
+        return entry.info
+
+    def characterize(
+        self,
+        spec: BenchmarkSpec,
+        plan: ExecutionPlan,
+        *,
+        backward: bool = False,
+        workload: Workload | None = None,
+    ) -> CompiledInfo:
+        """Compile (through the cache) + characterize, without timing.
+
+        For characterization-only consumers (Table II, dry-run style flows):
+        shares executables with full runs of the same plan parameters. A
+        warm cache with memoized analysis returns without building the
+        workload or its inputs; pass ``workload`` to reuse one already built.
+        """
+        preset = plan.resolve_preset(spec)
+        cached = self.cache.peek(self._cache_key(spec, plan, preset, backward))
+        if cached is not None and cached.info is not None:
+            self.cache.hits += 1
+            return cached.info
+        if workload is None:
+            workload = spec.build_preset(preset, **plan.overrides_for(spec.name))
+        args = self._make_args(workload, plan)
+        entry = self._stage_compile(spec, workload, args, plan, preset, backward)
+        return self._stage_characterize(workload, entry, backward)
+
+    # -- orchestration -----------------------------------------------------
+
+    def run(
+        self,
+        plan: ExecutionPlan,
+        *,
+        report_path: str | None = None,
+        jsonl_path: str | None = None,
+        verbose: bool = False,
+    ) -> RunResult:
+        specs = plan.select()
+        if plan.devices > jax.device_count():
+            raise ValueError(
+                f"plan requests {plan.devices} devices but only "
+                f"{jax.device_count()} available"
+            )
+        metadata = RunMetadata.capture(preset=plan.preset, devices=plan.devices)
+        writer = JsonlReportWriter(jsonl_path, metadata) if jsonl_path else None
+        records: list[BenchmarkRecord] = []
+
+        def emit(rec: BenchmarkRecord) -> None:
+            records.append(rec)
+            if writer is not None:
+                writer.write(rec)
+            if verbose:
+                print(rec.csv(), flush=True)
+
+        try:
+            for spec in specs:
+                for rec in self._run_benchmark(spec, plan):
+                    emit(rec)
+        finally:
+            if writer is not None:
+                writer.close()
+        if report_path:
+            write_report(records, report_path)
+        return RunResult(records=records, metadata=metadata, cache=self.cache)
+
+    def _run_benchmark(
+        self, spec: BenchmarkSpec, plan: ExecutionPlan
+    ) -> list[BenchmarkRecord]:
+        preset = plan.resolve_preset(spec)
+        try:
+            workload, args = self._stage_build(spec, plan, preset)
+        except Exception as e:  # noqa: BLE001 — fault isolation is the contract
+            return [
+                BenchmarkRecord.from_error(
+                    spec, preset, stage="build", error=_err_text(e)
+                )
+            ]
+        out: list[BenchmarkRecord] = []
+        for backward in plan.passes(workload):
+            out.append(
+                self._run_pass(spec, workload, args, plan, preset, backward)
+            )
+        return out
+
+    def _run_pass(
+        self,
+        spec: BenchmarkSpec,
+        workload: Workload,
+        args: tuple,
+        plan: ExecutionPlan,
+        preset: int,
+        backward: bool,
+    ) -> BenchmarkRecord:
+        stage = "compile"
+        try:
+            entry = self._stage_compile(spec, workload, args, plan, preset, backward)
+            stage = "measure"
+            timing = self._stage_measure(workload, entry, args, plan, backward)
+            stage = "characterize"
+            info = self._stage_characterize(workload, entry, backward)
+            return BenchmarkRecord.from_measurement(spec, preset, timing, info)
+        except Exception as e:  # noqa: BLE001 — fault isolation is the contract
+            return BenchmarkRecord.from_error(
+                spec, preset, stage=stage, error=_err_text(e), backward=backward
+            )
+
+
+def _pass_name(workload: Workload, backward: bool) -> str:
+    return workload.name + (".bwd" if backward else "")
+
+
+def _err_text(e: BaseException, limit: int = 500) -> str:
+    # Collapse whitespace: error records land in one-line CSV/JSONL rows.
+    text = " ".join(f"{type(e).__name__}: {e}".split())
+    return text if len(text) <= limit else text[: limit - 3] + "..."

@@ -1,14 +1,21 @@
-"""Timing + compilation harness — the CUDA Event API analogue.
+"""Timing + characterization primitives — the CUDA Event API analogue.
 
 The paper replaces Rodinia's system-time measurement with CUDA events for
 accurate kernel timing. JAX dispatch is asynchronous, so the analogue is:
 
-- compile first (``jax.jit(fn).lower(...).compile()``) so timing never
-  includes tracing/compilation,
 - synchronize with ``jax.block_until_ready`` around a monotonic clock,
 - warm up before measuring (spreads one-time allocation/transfer cost),
 - report per-call microseconds with spread, plus the compiled artifact's
   static cost/memory analysis for the roofline pipeline.
+
+Layering (post staged-engine refactor): this module holds the *primitives*
+— ``time_fn`` for an already-compiled callable, ``characterize_compiled``
+for the static analysis of a compiled executable, and small constructors
+for the result dataclasses. The staged path that compiles each workload
+exactly once and feeds the same executable to both the timer and the
+characterization lives in ``core/engine.py``; ``time_workload`` /
+``compile_workload`` remain as standalone one-shot conveniences (each
+compiles on its own — use the engine for suite runs).
 """
 
 from __future__ import annotations
@@ -23,11 +30,21 @@ import jax
 from repro.core.metrics import (
     RooflineTerms,
     collective_bytes_from_hlo,
+    cost_analysis_dict,
     roofline_terms,
 )
 from repro.core.registry import Workload
 
-__all__ = ["TimingResult", "CompiledInfo", "time_workload", "compile_workload", "time_fn"]
+__all__ = [
+    "TimingResult",
+    "CompiledInfo",
+    "time_workload",
+    "compile_workload",
+    "time_fn",
+    "timing_from_stats",
+    "characterize_compiled",
+    "empty_compiled_info",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -75,6 +92,29 @@ def time_fn(
     return mean, stdev
 
 
+def timing_from_stats(
+    workload: Workload,
+    *,
+    mean_us: float,
+    stdev_us: float,
+    iters: int,
+    backward: bool = False,
+) -> TimingResult:
+    """Fold measured wall time with the workload's analytic FLOP/byte counts."""
+    flops = workload.flops_bwd if backward else workload.flops
+    sec = mean_us / 1e6
+    return TimingResult(
+        name=workload.name + (".bwd" if backward else ""),
+        us_per_call=mean_us,
+        us_stdev=stdev_us,
+        iters=iters,
+        achieved_gflops=(flops / sec / 1e9) if (flops and sec > 0) else 0.0,
+        achieved_gbps=(workload.bytes_moved / sec / 1e9)
+        if (workload.bytes_moved and sec > 0)
+        else 0.0,
+    )
+
+
 def time_workload(
     workload: Workload,
     *,
@@ -94,18 +134,8 @@ def time_workload(
     if not backward and workload.validate is not None:
         workload.validate(out, args)
     mean, stdev = time_fn(jitted, args, iters=iters, warmup=warmup)
-    flops = workload.flops_bwd if backward else workload.flops
-    name = workload.name + (".bwd" if backward else "")
-    sec = mean / 1e6
-    return TimingResult(
-        name=name,
-        us_per_call=mean,
-        us_stdev=stdev,
-        iters=iters,
-        achieved_gflops=(flops / sec / 1e9) if (flops and sec > 0) else 0.0,
-        achieved_gbps=(workload.bytes_moved / sec / 1e9)
-        if (workload.bytes_moved and sec > 0)
-        else 0.0,
+    return timing_from_stats(
+        workload, mean_us=mean, stdev_us=stdev, iters=iters, backward=backward
     )
 
 
@@ -127,6 +157,30 @@ def _memory_analysis_dict(compiled: Any) -> dict[str, float]:
     return out
 
 
+def characterize_compiled(compiled: Any, name: str) -> CompiledInfo:
+    """Static cost/memory/roofline analysis of a compiled executable."""
+    cost = cost_analysis_dict(compiled)
+    coll = collective_bytes_from_hlo(compiled.as_text())
+    return CompiledInfo(
+        name=name,
+        cost=cost,
+        memory=_memory_analysis_dict(compiled),
+        roofline=roofline_terms(cost, collective_bytes=coll),
+        hlo_collectives_bytes=coll,
+    )
+
+
+def empty_compiled_info(name: str) -> CompiledInfo:
+    """Placeholder for workloads with no device program (``no_jit`` meta)."""
+    return CompiledInfo(
+        name=name,
+        cost={},
+        memory={},
+        roofline=roofline_terms({}, collective_bytes=0.0),
+        hlo_collectives_bytes=0.0,
+    )
+
+
 def compile_workload(
     workload: Workload,
     *,
@@ -143,25 +197,9 @@ def compile_workload(
     fn = workload.fn_bwd if backward else workload.fn
     if backward and fn is None:
         raise ValueError(f"workload {workload.name!r} has no backward pass")
+    name = workload.name + (".bwd" if backward else "")
     if workload.meta.get("no_jit"):
         # Host-transfer workloads have no device program to analyse.
-        from repro.core.metrics import roofline_terms as _rt
-
-        return CompiledInfo(
-            name=workload.name + (".bwd" if backward else ""),
-            cost={},
-            memory={},
-            roofline=_rt({}, collective_bytes=0.0),
-            hlo_collectives_bytes=0.0,
-        )
-    lowered = jax.jit(fn).lower(*args)
-    compiled = lowered.compile()
-    cost = dict(compiled.cost_analysis() or {})
-    coll = collective_bytes_from_hlo(compiled.as_text())
-    return CompiledInfo(
-        name=workload.name + (".bwd" if backward else ""),
-        cost={k: float(v) for k, v in cost.items() if isinstance(v, (int, float))},
-        memory=_memory_analysis_dict(compiled),
-        roofline=roofline_terms(cost, collective_bytes=coll),
-        hlo_collectives_bytes=coll,
-    )
+        return empty_compiled_info(name)
+    compiled = jax.jit(fn).lower(*args).compile()
+    return characterize_compiled(compiled, name)

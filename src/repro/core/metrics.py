@@ -27,11 +27,24 @@ __all__ = [
     "TPUv5e",
     "RooflineTerms",
     "roofline_terms",
+    "cost_analysis_dict",
     "collective_bytes_from_hlo",
     "collective_ops_from_hlo",
     "utilization_scale10",
     "model_flops",
 ]
+
+
+def cost_analysis_dict(compiled: Any) -> dict[str, float]:
+    """``compiled.cost_analysis()`` normalized across jax versions.
+
+    Older jax returns a one-element list of dicts; newer returns the dict
+    directly. Non-numeric entries are dropped.
+    """
+    raw = compiled.cost_analysis()
+    if isinstance(raw, (list, tuple)):
+        raw = raw[0] if raw else {}
+    return {k: float(v) for k, v in dict(raw or {}).items() if isinstance(v, (int, float))}
 
 
 @dataclasses.dataclass(frozen=True)

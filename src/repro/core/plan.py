@@ -1,0 +1,146 @@
+"""Execution plans — the declarative half of the staged engine.
+
+An :class:`ExecutionPlan` is a frozen value object describing *what* to run
+(selection by level / name / tag / domain, or an explicit spec list), *at
+what size* (SHOC-style preset plus Rodinia-style per-benchmark overrides),
+*which passes* (forward, and backward where a workload defines one), *how to
+measure* (iters / warmup / seed), and *where* (``devices`` — replicated
+multi-device placement via ``runtime/sharding`` helpers).
+
+Plans carry no execution state: the engine (``core/engine.py``) consumes a
+plan, owns the compilation cache and the stage sequence, and emits records.
+Two engines given equal plans produce comparable runs; the same plan can be
+re-run against a warm engine to reuse every compiled executable.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Mapping, Sequence
+
+from repro.core.registry import BenchmarkSpec, Workload, all_benchmarks
+
+__all__ = ["ExecutionPlan"]
+
+
+def _freeze_value(name: str, param: str, value: Any) -> Any:
+    """Override values feed the engine's compile-cache key: fail fast on
+    unhashable ones (lists become tuples) instead of erroring per-benchmark."""
+    if isinstance(value, list):
+        value = tuple(value)
+    try:
+        hash(value)
+    except TypeError:
+        raise ValueError(
+            f"override {name}.{param}={value!r} is not hashable; "
+            f"use scalars or tuples"
+        ) from None
+    return value
+
+
+def _freeze_overrides(
+    overrides: Mapping[str, Mapping[str, Any]] | None,
+) -> tuple[tuple[str, tuple[tuple[str, Any], ...]], ...]:
+    """Canonicalize name->{param: value} into a hashable, sorted tuple."""
+    if not overrides:
+        return ()
+    return tuple(
+        (
+            name,
+            tuple(
+                (param, _freeze_value(name, param, value))
+                for param, value in sorted(kwargs.items())
+            ),
+        )
+        for name, kwargs in sorted(overrides.items())
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutionPlan:
+    """What to run, at what size, how many passes, on how many devices."""
+
+    levels: tuple[int, ...] = (0, 1, 2)
+    names: tuple[str, ...] | None = None
+    tags: tuple[str, ...] | None = None
+    domains: tuple[str, ...] | None = None
+    preset: int = 0
+    # Rodinia-style size overrides: benchmark name -> {param: value}, applied
+    # on top of the preset by BenchmarkSpec.build_preset.
+    overrides: tuple[tuple[str, tuple[tuple[str, Any], ...]], ...] = ()
+    include_backward: bool = True
+    iters: int = 5
+    warmup: int = 2
+    seed: int = 0
+    # Replicated multi-device placement: inputs are device_put onto a 1-axis
+    # data mesh over the first `devices` devices before compilation, so the
+    # executable is lowered for that placement. 1 = single-device (default).
+    devices: int = 1
+    # Escape hatch for tests and programmatic callers: bypass the registry
+    # and run exactly these specs (selection filters are ignored).
+    specs: tuple[BenchmarkSpec, ...] | None = None
+
+    def __post_init__(self) -> None:
+        # Normalize sequence-ish fields so equal plans compare/hash equal.
+        def norm(field: str, value):
+            if value is not None and not isinstance(value, tuple):
+                object.__setattr__(self, field, tuple(value))
+
+        for f in ("levels", "names", "tags", "domains", "specs"):
+            norm(f, getattr(self, f))
+        if not isinstance(self.overrides, tuple):
+            object.__setattr__(self, "overrides", _freeze_overrides(self.overrides))
+        if self.iters < 1:
+            raise ValueError(f"iters must be >= 1, got {self.iters}")
+        if self.warmup < 0:
+            raise ValueError(f"warmup must be >= 0, got {self.warmup}")
+        if self.devices < 1:
+            raise ValueError(f"devices must be >= 1, got {self.devices}")
+
+    # -- selection ---------------------------------------------------------
+
+    def select(self) -> list[BenchmarkSpec]:
+        """Resolve the plan's selection against the registry (or ``specs``)."""
+        if self.specs is not None:
+            if not self.specs:
+                raise ValueError("plan.specs is empty")
+            return list(self.specs)
+        cands = all_benchmarks()
+        if self.names is not None:
+            known = {s.name for s in cands}
+            unknown = sorted(set(self.names) - known)
+            if unknown:
+                raise ValueError(
+                    f"unknown benchmark(s) {unknown}; known: {sorted(known)}"
+                )
+        selected = [
+            s
+            for s in cands
+            if s.level in self.levels
+            and (self.names is None or s.name in self.names)
+            and (self.tags is None or set(self.tags) & set(s.tags))
+            and (self.domains is None or s.domain in self.domains)
+        ]
+        if not selected:
+            raise ValueError(
+                f"no benchmarks match levels={self.levels} names={self.names} "
+                f"tags={self.tags} domains={self.domains}"
+            )
+        return selected
+
+    def resolve_preset(self, spec: BenchmarkSpec) -> int:
+        """The plan preset, clamped to the smallest one the spec defines."""
+        return self.preset if self.preset in spec.presets else min(spec.presets)
+
+    def overrides_for(self, name: str) -> dict[str, Any]:
+        for n, kwargs in self.overrides:
+            if n == name:
+                return dict(kwargs)
+        return {}
+
+    def passes(self, workload: Workload) -> list[bool]:
+        """[False] (forward), plus [True] when backward is planned+defined."""
+        out = [False]
+        if self.include_backward and workload.fn_bwd is not None:
+            out.append(True)
+        return out

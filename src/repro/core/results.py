@@ -1,21 +1,53 @@
-"""Result records and reports for the suite runner and benchmark drivers."""
+"""Result records and reports for the suite runner and benchmark drivers.
+
+Two report formats share one record schema:
+
+- **JSON** (``write_report`` / legacy): one array of record objects, written
+  atomically at the end of a run — the artifact EXPERIMENTS.md reads.
+- **JSONL** (``JsonlReportWriter``): streaming — a ``meta`` line carrying
+  run provenance (backend, device count, jax version, schema version)
+  followed by one ``record`` line per benchmark, flushed as each finishes,
+  so a killed or crashed run still leaves every completed row on disk.
+
+``load_records`` sniffs the format and reads either; ``load_run`` also
+returns the :class:`RunMetadata` when the file carries it. Error rows
+(per-benchmark fault isolation in the engine) are ordinary records with
+``status="error"`` so both formats round-trip them unchanged.
+"""
 
 from __future__ import annotations
 
 import dataclasses
 import json
 import os
-from typing import Iterable, Sequence
+from typing import IO, Iterable, Sequence
 
 from repro.core.harness import CompiledInfo, TimingResult
 from repro.core.metrics import utilization_scale10
 
-__all__ = ["BenchmarkRecord", "to_csv_lines", "write_report", "load_records"]
+__all__ = [
+    "SCHEMA_VERSION",
+    "BenchmarkRecord",
+    "RunMetadata",
+    "JsonlReportWriter",
+    "to_csv_lines",
+    "write_report",
+    "load_records",
+    "load_run",
+]
+
+# Bump when BenchmarkRecord/RunMetadata fields change incompatibly.
+SCHEMA_VERSION = 1
 
 
 @dataclasses.dataclass
 class BenchmarkRecord:
-    """One row of suite output: timing + static characterization."""
+    """One row of suite output: timing + static characterization.
+
+    ``status`` is ``"ok"`` for measured rows and ``"error"`` for rows the
+    engine emitted after a per-benchmark failure (``error`` holds the stage
+    and exception text; the numeric fields are zeroed).
+    """
 
     name: str
     level: int
@@ -29,6 +61,8 @@ class BenchmarkRecord:
     memory_util10: int
     dominant: str
     derived: str = ""
+    status: str = "ok"
+    error: str = ""
 
     @classmethod
     def from_measurement(
@@ -58,8 +92,61 @@ class BenchmarkRecord:
             ),
         )
 
+    @classmethod
+    def from_error(
+        cls,
+        spec,
+        preset: int,
+        *,
+        stage: str,
+        error: str,
+        backward: bool = False,
+    ) -> "BenchmarkRecord":
+        return cls(
+            name=spec.name + (".bwd" if backward else ""),
+            level=spec.level,
+            dwarf=spec.dwarf,
+            domain=spec.domain,
+            preset=preset,
+            us_per_call=0.0,
+            achieved_gflops=0.0,
+            achieved_gbps=0.0,
+            compute_util10=0,
+            memory_util10=0,
+            dominant="error",
+            derived=f"stage={stage}",
+            status="error",
+            error=error,
+        )
+
     def csv(self) -> str:
+        if self.status != "ok":
+            return f"{self.name},0.00,{self.status}:{self.derived}"
         return f"{self.name},{self.us_per_call:.2f},{self.derived}"
+
+
+@dataclasses.dataclass(frozen=True)
+class RunMetadata:
+    """Provenance header for a run: enough to interpret the rows later."""
+
+    backend: str
+    device_count: int
+    jax_version: str
+    schema_version: int = SCHEMA_VERSION
+    preset: int | None = None
+    devices: int = 1
+
+    @classmethod
+    def capture(cls, *, preset: int | None = None, devices: int = 1) -> "RunMetadata":
+        import jax
+
+        return cls(
+            backend=jax.default_backend(),
+            device_count=jax.device_count(),
+            jax_version=jax.__version__,
+            preset=preset,
+            devices=devices,
+        )
 
 
 def to_csv_lines(records: Iterable[BenchmarkRecord]) -> list[str]:
@@ -75,6 +162,68 @@ def write_report(records: Sequence[BenchmarkRecord], path: str) -> None:
     os.replace(tmp, path)
 
 
-def load_records(path: str) -> list[BenchmarkRecord]:
+class JsonlReportWriter:
+    """Streaming JSONL report: a ``meta`` line, then one line per record.
+
+    Each line is flushed as written so partial runs leave usable reports.
+    """
+
+    def __init__(self, path: str, metadata: RunMetadata | None = None) -> None:
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        self.path = path
+        self._f: IO[str] = open(path, "w")
+        if metadata is not None:
+            self._emit({"kind": "meta", **dataclasses.asdict(metadata)})
+
+    def _emit(self, obj: dict) -> None:
+        self._f.write(json.dumps(obj, sort_keys=True) + "\n")
+        self._f.flush()
+
+    def write(self, record: BenchmarkRecord) -> None:
+        self._emit({"kind": "record", **dataclasses.asdict(record)})
+
+    def close(self) -> None:
+        if not self._f.closed:
+            self._f.close()
+
+    def __enter__(self) -> "JsonlReportWriter":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+def _record_from_dict(d: dict) -> BenchmarkRecord:
+    fields = {f.name for f in dataclasses.fields(BenchmarkRecord)}
+    return BenchmarkRecord(**{k: v for k, v in d.items() if k in fields})
+
+
+def load_run(path: str) -> tuple[RunMetadata | None, list[BenchmarkRecord]]:
+    """Read either report format; metadata is None for legacy JSON arrays."""
     with open(path) as f:
-        return [BenchmarkRecord(**d) for d in json.load(f)]
+        text = f.read()
+    if text.lstrip().startswith("["):  # legacy JSON array
+        return None, [_record_from_dict(d) for d in json.loads(text)]
+    meta: RunMetadata | None = None
+    records: list[BenchmarkRecord] = []
+    lines = [ln for ln in text.splitlines() if ln.strip()]
+    for i, line in enumerate(lines):
+        try:
+            obj = json.loads(line)
+        except json.JSONDecodeError:
+            if i == len(lines) - 1:
+                # A run killed mid-write leaves a torn final line; every
+                # completed row before it must stay readable.
+                break
+            raise
+        kind = obj.pop("kind", "record")
+        if kind == "meta":
+            fields = {f.name for f in dataclasses.fields(RunMetadata)}
+            meta = RunMetadata(**{k: v for k, v in obj.items() if k in fields})
+        else:
+            records.append(_record_from_dict(obj))
+    return meta, records
+
+
+def load_records(path: str) -> list[BenchmarkRecord]:
+    return load_run(path)[1]

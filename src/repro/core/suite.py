@@ -1,82 +1,141 @@
-"""The unified suite runner — SHOC-style driver over the whole registry.
+"""The unified suite runner — a thin CLI over the staged execution engine.
 
 ``run_suite`` is what `examples/run_suite.py` and `python -m repro.core.suite`
-invoke: select benchmarks (by level / name), pick a preset (or per-benchmark
-size overrides), then for each benchmark time the forward (and backward where
-defined) pass and collect the static roofline characterization. Output is the
-paper's Fig.-5-style table plus a machine-readable JSON report.
+invoke. Since the plan/engine refactor it only *assembles* an
+:class:`~repro.core.plan.ExecutionPlan` (selection by level / name / tag /
+domain, preset + overrides, passes, iters/warmup, device placement) and hands
+it to the module-level :class:`~repro.core.engine.Engine`, which owns the
+stage sequence (build → compile → measure → characterize → report), the
+compile-once cache shared by every caller in the process, and per-benchmark
+fault isolation. Output is the paper's Fig.-5-style table plus a
+machine-readable JSON report and/or a streaming JSONL report with run
+metadata.
 """
 
 from __future__ import annotations
 
 import argparse
 import sys
-from typing import Sequence
+from typing import Any, Mapping, Sequence
 
-from repro.core.harness import compile_workload, time_workload
-from repro.core.registry import BenchmarkSpec, all_benchmarks
-from repro.core.results import BenchmarkRecord, to_csv_lines, write_report
+from repro.core.engine import Engine
+from repro.core.plan import ExecutionPlan
+from repro.core.results import BenchmarkRecord, to_csv_lines
 
-__all__ = ["run_suite", "main"]
+__all__ = ["run_suite", "main", "DEFAULT_ENGINE"]
+
+# Shared across run_suite callers (figure drivers, examples, tests) so a
+# workload compiled for one section is reused by every later section.
+DEFAULT_ENGINE = Engine()
 
 
 def run_suite(
     *,
     levels: Sequence[int] = (0, 1, 2),
     names: Sequence[str] | None = None,
+    tags: Sequence[str] | None = None,
+    domains: Sequence[str] | None = None,
     preset: int = 0,
+    overrides: Mapping[str, Mapping[str, Any]] | None = None,
     iters: int = 5,
     warmup: int = 2,
     include_backward: bool = True,
+    seed: int = 0,
+    devices: int = 1,
     report_path: str | None = None,
+    jsonl_path: str | None = None,
     verbose: bool = True,
+    engine: Engine | None = None,
 ) -> list[BenchmarkRecord]:
-    records: list[BenchmarkRecord] = []
-    selected: list[BenchmarkSpec] = [
-        s
-        for s in all_benchmarks()
-        if s.level in levels and (names is None or s.name in names)
-    ]
-    if not selected:
-        raise ValueError(f"no benchmarks match levels={levels} names={names}")
-    for spec in selected:
-        p = preset if preset in spec.presets else min(spec.presets)
-        workload = spec.build_preset(p)
-        passes = [False] + ([True] if include_backward and workload.fn_bwd else [])
-        for backward in passes:
-            timing = time_workload(workload, iters=iters, warmup=warmup, backward=backward)
-            compiled = compile_workload(workload, backward=backward)
-            rec = BenchmarkRecord.from_measurement(spec, p, timing, compiled)
-            records.append(rec)
-            if verbose:
-                print(rec.csv(), flush=True)
-    if report_path:
-        write_report(records, report_path)
-    return records
+    plan = ExecutionPlan(
+        levels=tuple(levels),
+        names=tuple(names) if names is not None else None,
+        tags=tuple(tags) if tags is not None else None,
+        domains=tuple(domains) if domains is not None else None,
+        preset=preset,
+        overrides=overrides or {},
+        include_backward=include_backward,
+        iters=iters,
+        warmup=warmup,
+        seed=seed,
+        devices=devices,
+    )
+    result = (engine or DEFAULT_ENGINE).run(
+        plan, report_path=report_path, jsonl_path=jsonl_path, verbose=verbose
+    )
+    return result.records
+
+
+def _parse_overrides(items: Sequence[str]) -> dict[str, dict[str, Any]]:
+    """``name.param=value`` CLI overrides -> {name: {param: value}}."""
+    out: dict[str, dict[str, Any]] = {}
+    for item in items:
+        try:
+            target, value = item.split("=", 1)
+            name, param = target.rsplit(".", 1)
+        except ValueError:
+            raise SystemExit(f"bad --override {item!r}; expected name.param=value")
+        try:
+            parsed: Any = int(value)
+        except ValueError:
+            try:
+                parsed = float(value)
+            except ValueError:
+                parsed = value
+        out.setdefault(name, {})[param] = parsed
+    return out
 
 
 def main(argv: Sequence[str] | None = None) -> int:
     ap = argparse.ArgumentParser(description="Run the Mirovia/Altis suite")
     ap.add_argument("--levels", type=int, nargs="*", default=[0, 1, 2])
     ap.add_argument("--names", type=str, nargs="*", default=None)
+    ap.add_argument("--tags", type=str, nargs="*", default=None)
+    ap.add_argument("--domains", type=str, nargs="*", default=None)
     ap.add_argument("--preset", type=int, default=0)
+    ap.add_argument("--override", action="append", default=[],
+                    metavar="NAME.PARAM=VALUE",
+                    help="Rodinia-style size override, repeatable")
     ap.add_argument("--iters", type=int, default=5)
     ap.add_argument("--warmup", type=int, default=2)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--devices", type=int, default=1,
+                    help="replicate inputs over the first N devices")
     ap.add_argument("--no-backward", action="store_true")
-    ap.add_argument("--report", type=str, default=None)
+    ap.add_argument("--report", type=str, default=None, help="JSON report path")
+    ap.add_argument("--jsonl", type=str, default=None,
+                    help="streaming JSONL report path (with run metadata)")
     args = ap.parse_args(argv)
-    records = run_suite(
-        levels=args.levels,
-        names=args.names,
-        preset=args.preset,
-        iters=args.iters,
-        warmup=args.warmup,
-        include_backward=not args.no_backward,
-        report_path=args.report,
-    )
+    try:
+        records = _run_cli(args)
+    except ValueError as e:  # bad selection / devices: config error, not a crash
+        print(f"error: {e}", file=sys.stderr)
+        return 2
     for line in to_csv_lines(records):
         print(line)
-    return 0
+    errors = [r for r in records if r.status != "ok"]
+    for r in errors:
+        print(f"# ERROR {r.name}: {r.error}", file=sys.stderr)
+    return 1 if errors else 0
+
+
+def _run_cli(args) -> list[BenchmarkRecord]:
+    return run_suite(
+        levels=args.levels,
+        names=args.names,
+        tags=args.tags,
+        domains=args.domains,
+        preset=args.preset,
+        overrides=_parse_overrides(args.override),
+        iters=args.iters,
+        warmup=args.warmup,
+        seed=args.seed,
+        devices=args.devices,
+        include_backward=not args.no_backward,
+        report_path=args.report,
+        jsonl_path=args.jsonl,
+        verbose=False,
+    )
 
 
 if __name__ == "__main__":

@@ -22,11 +22,33 @@ from typing import Any
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+try:  # newer jax exports shard_map at top level with a `check_vma` kwarg
+    shard_map = jax.shard_map
+except AttributeError:  # older jax keeps it in experimental as `check_rep`
+    from functools import wraps
+
+    from jax.experimental.shard_map import shard_map as _experimental_shard_map
+
+    @wraps(_experimental_shard_map)
+    def shard_map(*args, **kwargs):
+        if "check_vma" in kwargs:
+            kwargs["check_rep"] = kwargs.pop("check_vma")
+        return _experimental_shard_map(*args, **kwargs)
+
+
+# jax.lax.pvary (varying-axis annotation for the vma checker) only exists on
+# newer jax; it is semantically an identity, so fall back to one.
+pvary = getattr(jax.lax, "pvary", lambda x, axes: x)
+
 __all__ = [
     "ShardingRules",
     "param_pspecs",
     "batch_pspec",
     "make_activation_sharder",
+    "data_mesh",
+    "replicate",
+    "shard_map",
+    "pvary",
 ]
 
 # name -> ordered candidate shard dims (on the UNstacked leaf shape).
@@ -228,6 +250,27 @@ def make_activation_sharder(rules: ShardingRules):
         return jax.lax.with_sharding_constraint(x, NamedSharding(rules.mesh, s))
 
     return shard
+
+
+def data_mesh(n_devices: int | None = None, axis: str = "data") -> Mesh:
+    """A 1-axis mesh over the first ``n_devices`` devices (all by default).
+
+    The benchmark engine's ``devices`` knob uses this for replicated
+    multi-device scenarios; model code uses the richer meshes in launch/.
+    """
+    devs = jax.devices()
+    n = len(devs) if n_devices is None else n_devices
+    if not 1 <= n <= len(devs):
+        raise ValueError(f"requested {n} devices but only {len(devs)} available")
+    import numpy as np
+
+    return Mesh(np.asarray(devs[:n]), (axis,))
+
+
+def replicate(tree: Any, mesh: Mesh) -> Any:
+    """device_put every array leaf fully replicated across ``mesh``."""
+    s = NamedSharding(mesh, P())
+    return jax.tree.map(lambda x: jax.device_put(x, s), tree)
 
 
 def named(mesh: Mesh, spec_tree):

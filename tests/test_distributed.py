@@ -55,8 +55,9 @@ def test_int8_error_feedback_compression():
         def f(gsh, esh):
             out, err = comp.reduce_mean({"w": gsh}, {"w": esh})
             return out["w"], err["w"]
-        fm = jax.jit(jax.shard_map(f, mesh=mesh, in_specs=(P("pod"), P("pod")),
-                                   out_specs=(P(), P("pod")), check_vma=False))
+        from repro.runtime.sharding import shard_map
+        fm = jax.jit(shard_map(f, mesh=mesh, in_specs=(P("pod"), P("pod")),
+                               out_specs=(P(), P("pod")), check_vma=False))
         want = np.asarray(g).mean(0)
         # single shot: bounded quantization error (int8 against a shared
         # max-scale: ~scale/2 per element)

@@ -1,0 +1,32 @@
+#!/usr/bin/env bash
+# CI smoke: run a preset-0 suite slice through the staged engine with a
+# streaming JSONL report, verify the report loads back, then tier-1 pytest.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+out="$(mktemp -d)"
+trap 'rm -rf "$out"' EXIT
+
+python -m repro.core.suite \
+  --levels 0 1 --preset 0 --iters 1 --warmup 0 --no-backward \
+  --jsonl "$out/smoke.jsonl"
+
+python - "$out/smoke.jsonl" <<'PY'
+import sys
+
+from repro.core.results import load_run
+
+meta, records = load_run(sys.argv[1])
+assert meta is not None and meta.backend and meta.jax_version, meta
+ok = [r for r in records if r.status == "ok"]
+bad = [r for r in records if r.status != "ok"]
+assert ok, "smoke suite produced no ok records"
+for r in bad:
+    print(f"ERROR {r.name}: {r.error}", file=sys.stderr)
+print(f"smoke: {len(ok)} ok / {len(bad)} error records "
+      f"(backend={meta.backend}, jax={meta.jax_version})")
+sys.exit(1 if bad else 0)
+PY
+
+python -m pytest -x -q
