@@ -1,0 +1,124 @@
+"""Device-scaling figure: data-parallel throughput across device counts.
+
+The Mirovia/Milabench-style scaling study the paper's successors measure:
+run a sample of batchable benchmarks under ``placement=shard`` at each
+device count in the sweep and report, per (benchmark, count), the wall
+time and the scaling efficiency against the same run's 1-device row
+(efficiency = speedup / devices; 1.0 is perfect linear scaling).
+
+Benchmarks that opt out of ``batch_dims`` fall back to replicate and show
+efficiency ≈ 1/devices — the redundant-work floor the placement layer
+exists to beat.
+
+As a section (``benchmarks/run.py --sections fig_scaling``) it emits the
+standard CSV rows; as a script it prints a per-benchmark scaling table.
+Counts beyond this host's devices are skipped (force more with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``).
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+
+if __package__ in (None, ""):  # `python benchmarks/fig_scaling.py`
+    sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from benchmarks.common import Row, record_rows
+from repro.core import run_suite
+
+# A cross-section of batchable workloads: MXU (gemm/connected), VPU
+# streaming (devicemem), mixed compute (kmeans), DNN fwd+bwd (softmax),
+# plus one opted-out workload (bfs) so the replicate fallback shows up in
+# the same table.
+DEFAULT_NAMES = (
+    "gemm_f32_nn",
+    "devicemem_stream",
+    "kmeans",
+    "softmax",
+    "bfs",
+)
+DEFAULT_COUNTS = (1, 2, 4, 8)
+
+
+def _usable_counts(counts) -> tuple[int, ...]:
+    import jax
+
+    avail = jax.device_count()
+    usable = tuple(c for c in counts if c <= avail)
+    return usable or (1,)
+
+
+def rows(
+    preset: int = 0,
+    counts=DEFAULT_COUNTS,
+    names=DEFAULT_NAMES,
+    placement: str = "shard",
+) -> list[Row]:
+    records = run_suite(
+        names=list(names),
+        preset=preset,
+        iters=3,
+        warmup=1,
+        include_backward=False,
+        placement=placement,
+        scale_devices=_usable_counts(counts),
+        verbose=False,
+    )
+    return record_rows(
+        "fig_scaling",
+        records,
+        lambda r: (
+            f"devices={r.devices};placement={r.placement};eff="
+            + (
+                f"{r.scaling_efficiency:.3f}"
+                if r.scaling_efficiency is not None
+                else "baseline"
+            )
+        ),
+    )
+
+
+def main() -> int:
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--preset", type=int, default=0)
+    ap.add_argument("--names", nargs="*", default=list(DEFAULT_NAMES))
+    ap.add_argument("--counts", type=int, nargs="*", default=list(DEFAULT_COUNTS))
+    ap.add_argument("--placement", default="shard",
+                    choices=("replicate", "shard"))
+    args = ap.parse_args()
+
+    out = rows(
+        preset=args.preset, counts=tuple(args.counts),
+        names=tuple(args.names), placement=args.placement,
+    )
+    # Pivot rows into a per-benchmark scaling table.
+    table: dict[str, dict[int, tuple[float, str]]] = {}
+    counts: list[int] = []
+    for name, us, derived in out:
+        fields = dict(kv.split("=", 1) for kv in derived.split(";") if "=" in kv)
+        if "devices" not in fields:
+            print(f"# {name}: {derived}", file=sys.stderr)
+            continue
+        n = int(fields["devices"])
+        if n not in counts:
+            counts.append(n)
+        bench = name.removeprefix("fig_scaling.")
+        table.setdefault(bench, {})[n] = (us, fields.get("eff", "-"))
+    header = f"{'benchmark':<28}" + "".join(
+        f"{f'{n}dev us':>12}{'eff':>10}" for n in counts
+    )
+    print(header)
+    for bench, per_count in table.items():
+        line = f"{bench:<28}"
+        for n in counts:
+            us, eff = per_count.get(n, (0.0, "-"))
+            line += f"{us:>12.1f}{eff:>10}"
+        print(line)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

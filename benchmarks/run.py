@@ -5,6 +5,7 @@ Prints ``name,us_per_call,derived`` CSV. Sections:
   fig12    — level 0/1 utilization (Figs. 1–2 analogue)
   fig3/4   — DNN forward/backward utilization
   fig5     — application-tier utilization (Fig. 5)
+  fig_scaling — device-scaling sweep (sharded data-parallel placement)
   table2   — per-layer kernel classification (Table II)
   feat_*   — §V-B modern-feature studies (HyperQ / UM / CG / DP analogues)
   roofline — §Roofline table from the multi-pod dry-run artifacts
@@ -32,6 +33,7 @@ SECTION_NAMES = (
     "fig3",
     "fig4",
     "fig5",
+    "fig_scaling",
     "table2",
     "feat_hyperq",
     "feat_unified_memory",
@@ -65,6 +67,7 @@ def main(argv=None) -> int:
         fig4_dnn_backward,
         fig5_suite_utilization,
         fig12_legacy_utilization,
+        fig_scaling,
         roofline_table,
         table1_suite,
         table2_dnn_kernels,
@@ -76,6 +79,7 @@ def main(argv=None) -> int:
         "fig3": lambda: fig3_dnn_forward.rows(preset=args.preset),
         "fig4": lambda: fig4_dnn_backward.rows(preset=args.preset),
         "fig5": lambda: fig5_suite_utilization.rows(preset=args.preset),
+        "fig_scaling": lambda: fig_scaling.rows(preset=args.preset),
         "table2": lambda: table2_dnn_kernels.rows(preset=max(args.preset, 1)),
         "feat_hyperq": feat_hyperq.rows,
         "feat_unified_memory": feat_unified_memory.rows,

@@ -15,7 +15,8 @@ Usage:
 
 import argparse
 
-from repro.core import Engine, ExecutionPlan
+from repro.core import Engine, ExecutionPlan, Placement
+from repro.core.plan import PLACEMENT_MODES
 from repro.core.results import to_csv_lines
 
 
@@ -28,7 +29,9 @@ def main() -> None:
     ap.add_argument("--jsonl", default=None, help="streaming JSONL report path")
     ap.add_argument("--iters", type=int, default=5)
     ap.add_argument("--devices", type=int, default=1,
-                    help="replicate inputs over the first N devices")
+                    help="run on the first N devices")
+    ap.add_argument("--placement", choices=PLACEMENT_MODES, default="replicate",
+                    help="replicate inputs or shard declared batch dims")
     args = ap.parse_args()
     plan = ExecutionPlan(
         levels=tuple(args.levels),
@@ -36,7 +39,7 @@ def main() -> None:
         preset=args.preset,
         iters=args.iters,
         warmup=2,
-        devices=args.devices,
+        placement=Placement(devices=args.devices, mode=args.placement),
     )
     engine = Engine()
     result = engine.run(plan, report_path=args.report, jsonl_path=args.jsonl)

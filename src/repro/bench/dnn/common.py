@@ -34,19 +34,28 @@ def dnn_workload(
     flops_bwd: float | None = None,
     validate: Callable | None = None,
     diff_argnums: tuple[int, ...] | None = None,
+    batch_dims: tuple[int | None, ...] | None = None,
 ) -> Workload:
     def loss(*args):
         return _mean_of_outputs(fn(*args))
 
+    if diff_argnums is None or batch_dims is None:
+        # Arity/dtype inspection only: abstract evaluation builds no arrays.
+        sample = jax.eval_shape(lambda: make_inputs(0))
     if diff_argnums is None:
         # Differentiate w.r.t. every floating-point positional arg.
-        sample = make_inputs(0)
         diff_argnums = tuple(
             i
             for i, a in enumerate(sample)
             if hasattr(a, "dtype") and jnp.issubdtype(a.dtype, jnp.floating)
         )
     grad_fn = jax.grad(loss, argnums=diff_argnums) if diff_argnums else None
+    # Every DNN layer is data-parallel over the example/batch dim of its
+    # activation input (arg 0); weights and keys replicate. Both passes
+    # shard the same way — gradients of replicated weights psum over the
+    # batch shards, exactly DP training's gradient all-reduce.
+    if batch_dims is None:
+        batch_dims = (0,) + (None,) * (len(sample) - 1)
     return Workload(
         name=name,
         fn=fn,
@@ -56,5 +65,6 @@ def dnn_workload(
         validate=validate,
         fn_bwd=grad_fn,
         flops_bwd=flops_bwd if flops_bwd is not None else 2.0 * flops,
+        batch_dims=batch_dims,
         meta={"dnn": True},
     )

@@ -64,6 +64,11 @@ def _make(n: int, op: str) -> Workload:
         make_inputs=_inputs(n),
         flops=flops,
         bytes_moved=nbytes,
+        # stream/reduce are data-parallel over the element dim (reduce's sum
+        # becomes a per-shard partial + psum). vmem opts out: the benchmark
+        # is one on-chip tile sliced from x — sharding the source vector
+        # would just move the tile's bytes between devices.
+        batch_dims=(0, 0) if op in ("stream", "reduce") else None,
     )
 
 

@@ -33,6 +33,9 @@ def _make_download(nbytes: int) -> Workload:
         fn=fn,
         make_inputs=make_inputs,
         bytes_moved=float(nbytes),
+        # Host-bus transfers time the staging path itself; there is no
+        # device computation to data-parallelize.
+        batch_dims=None,
         meta={"no_jit": True},
     )
 
@@ -53,6 +56,7 @@ def _make_readback(nbytes: int) -> Workload:
         fn=fn,
         make_inputs=make_inputs,
         bytes_moved=float(nbytes),
+        batch_dims=None,  # see _make_download
         meta={"no_jit": True},
     )
 

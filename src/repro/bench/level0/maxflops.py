@@ -43,6 +43,9 @@ def _make(n: int, chain: int, dtype: str) -> Workload:
         make_inputs=make_inputs,
         flops=2.0 * n * n * n * chain,
         bytes_moved=2.0 * n * n * jnp.dtype(dt).itemsize,
+        # Data-parallel over a's rows: every chain step is (rows, n) @ (n, n)
+        # with b replicated, so shards never exchange data.
+        batch_dims=(0, None),
     )
 
 

@@ -98,6 +98,10 @@ def _make(n_nodes: int, n_edges: int) -> Workload:
         flops=2.0 * n_edges,  # per level bound; reported per-call
         bytes_moved=8.0 * n_edges,
         validate=validate,
+        # Opt out: the frontier state spans the whole graph and every
+        # relaxation scatters across it; sharded plans fall back to
+        # replicate (the ISSUE's canonical non-batchable example).
+        batch_dims=None,
     )
 
 

@@ -33,12 +33,17 @@ def _make(n: int, dtype: str, transpose: str) -> Workload:
             b = b.T
         return ops.matmul(a, b)
 
+    # "nn" is data-parallel over a's rows (b replicated, output row-sharded,
+    # no collectives). The transposed variants opt out: a.T turns a's leading
+    # dim into the contraction dim, which is reduction- not data-parallelism.
+    batch_dims = (0, None) if transpose == "nn" else None
     return Workload(
         name=f"gemm.{dtype}.{transpose}.n{n}",
         fn=fn,
         make_inputs=make_inputs,
         flops=2.0 * n**3,
         bytes_moved=3.0 * n * n * jnp.dtype(dt).itemsize,
+        batch_dims=batch_dims,
     )
 
 

@@ -40,6 +40,10 @@ def _make(table_n: int, updates: int) -> Workload:
         flops=float(updates),
         bytes_moved=12.0 * updates,  # idx read + table read + table write
         validate=validate,
+        # Opt out: every update may touch any table row, so sharding the
+        # table (or the updates against a replicated table) turns the
+        # scatter into all-to-all traffic — not data parallelism.
+        batch_dims=None,
         meta={"updates": updates},
     )
 

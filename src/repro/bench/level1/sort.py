@@ -49,6 +49,9 @@ def _make(n: int) -> Workload:
         flops=float(n * log2n * (log2n + 1) / 2),  # compare-exchanges
         bytes_moved=16.0 * n,
         validate=validate,
+        # Opt out: bitonic stages compare-exchange across the full array
+        # (global reshape-swaps), so there is no independent batch dim.
+        batch_dims=None,
     )
 
 

@@ -64,6 +64,9 @@ def _make(n: int, d: int, k: int, iters: int) -> Workload:
         flops=float(iters * (2.0 * n * d * k + 2.0 * n * k * d)),
         bytes_moved=float(iters * n * d * 4 * 2),
         validate=validate,
+        # Classic data-parallel Lloyd: points shard over rows, centers
+        # replicate; the one-hot segment sums reduce with a psum per iter.
+        batch_dims=(0, None),
     )
 
 

@@ -111,6 +111,10 @@ def _make(n: int, max_iter: int, adaptive: bool) -> Workload:
         flops=float(n * n * max_iter * 10),  # upper bound (flat version)
         bytes_moved=float(n * n * 12),
         validate=validate,
+        # Flat escape-time is per-pixel independent: shard image rows (the
+        # while_loop's global any() is one scalar psum per iteration).
+        # Mariani-Silver opts out — its tiling reshapes span both axes.
+        batch_dims=None if adaptive else (0,),
     )
 
 

@@ -82,6 +82,9 @@ def _make(n_particles: int, steps: int) -> Workload:
         flops=float(steps * n_particles * 30),
         bytes_moved=float(steps * n_particles * 2 * 4 * 4),
         validate=validate,
+        # Opt out: systematic resampling gathers particles through a global
+        # CDF every step; the cloud cannot be partitioned independently.
+        batch_dims=None,
     )
 
 

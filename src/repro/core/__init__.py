@@ -29,6 +29,6 @@ from repro.core.results import (  # noqa: F401
     to_csv_lines,
     write_report,
 )
-from repro.core.plan import ExecutionPlan  # noqa: F401
+from repro.core.plan import ExecutionPlan, Placement, PlanError  # noqa: F401
 from repro.core.engine import CompileCache, Engine, RunResult  # noqa: F401
 from repro.core.suite import run_suite  # noqa: F401

@@ -1,23 +1,33 @@
-"""Staged execution engine: build → compile → measure → characterize → report.
+"""Staged execution engine: build → place → compile → measure →
+characterize → report.
 
 The imperative half of the plan/engine split (``core/plan.py`` holds the
 declarative half). For every selected benchmark the engine runs the stages:
 
 - **build**: instantiate the workload from the spec at the plan's preset
-  (plus Rodinia-style overrides) and materialize its inputs; with
-  ``plan.devices > 1`` inputs are replicated onto a data mesh
-  (``runtime/sharding.data_mesh`` / ``replicate``) before compilation.
+  (plus Rodinia-style overrides) and materialize its inputs.
+- **place**: realize the plan's :class:`~repro.core.plan.Placement` on a
+  data mesh (``runtime/sharding``): ``replicate`` device_puts every input
+  on all devices; ``shard`` partitions inputs along the workload's
+  declared ``batch_dims`` (non-batchable workloads fall back to replicate
+  and the record says so). Single-device runs skip placement entirely.
 - **compile**: lower + compile through an in-process cache keyed on
-  ``(name, preset, overrides, backward, backend, devices)`` so each
-  workload is compiled **exactly once per pass** — the same executable
-  feeds both the timer and the static analysis (the seed compiled twice:
-  once in ``time_workload``, again in ``compile_workload``).
+  ``(name, preset, overrides, backward, backend, devices, placement)`` so
+  each workload is compiled **exactly once per (pass, placement)** — the
+  sharded and replicated lowerings are distinct executables, and the same
+  executable feeds both the timer and the static analysis.
 - **measure**: validate the first output, then time the compiled
   executable (``harness.time_fn``).
 - **characterize**: static cost/memory/roofline analysis of the cached
   executable, computed once and memoized alongside it.
-- **report**: a :class:`BenchmarkRecord`, streamed to the JSONL writer as
+- **report**: a :class:`BenchmarkRecord` carrying ``devices`` /
+  ``placement`` / ``scaling_efficiency``, streamed to the JSONL writer as
   it is produced.
+
+``run()`` iterates ``plan.device_sweep`` (ascending), re-running the
+selection at each device count against the shared cache; multi-device rows
+carry ``scaling_efficiency`` — speedup over the same run's 1-device row,
+divided by the device count.
 
 Failures are isolated per benchmark: an exception in any stage yields an
 ``status="error"`` record naming the stage and the suite keeps going.
@@ -41,7 +51,7 @@ from repro.core.harness import (
     time_fn,
     timing_from_stats,
 )
-from repro.core.plan import ExecutionPlan
+from repro.core.plan import ExecutionPlan, Placement, PlanError
 from repro.core.registry import BenchmarkSpec, Workload
 from repro.core.results import (
     BenchmarkRecord,
@@ -50,10 +60,10 @@ from repro.core.results import (
     write_report,
 )
 
-__all__ = ["CompileCache", "Engine", "RunResult"]
+__all__ = ["CompileCache", "Engine", "RunResult", "SweepStat"]
 
-# (name, preset, frozen-overrides, backward, backend, devices)
-CacheKey = tuple[str, int, tuple, bool, str, int]
+# (name, preset, frozen-overrides, backward, backend, devices, placement)
+CacheKey = tuple[str, int, tuple, bool, str, int, str]
 
 
 @dataclasses.dataclass
@@ -93,11 +103,21 @@ class CompileCache:
         self._entries.clear()
 
 
+@dataclasses.dataclass(frozen=True)
+class SweepStat:
+    """Cache traffic of one device-sweep step (scaling-run diagnostics)."""
+
+    devices: int
+    misses: int
+    hits: int
+
+
 @dataclasses.dataclass
 class RunResult:
     records: list[BenchmarkRecord]
     metadata: RunMetadata
     cache: CompileCache
+    sweep_stats: list[SweepStat] = dataclasses.field(default_factory=list)
 
     @property
     def ok_records(self) -> list[BenchmarkRecord]:
@@ -121,7 +141,12 @@ class Engine:
     # -- stages ------------------------------------------------------------
 
     def _cache_key(
-        self, spec: BenchmarkSpec, plan: ExecutionPlan, preset: int, backward: bool
+        self,
+        spec: BenchmarkSpec,
+        plan: ExecutionPlan,
+        preset: int,
+        backward: bool,
+        placement: Placement,
     ) -> CacheKey:
         return (
             spec.name,
@@ -129,22 +154,48 @@ class Engine:
             tuple(sorted(plan.overrides_for(spec.name).items())),
             backward,
             jax.default_backend(),
-            plan.devices,
+            placement.devices,
+            placement.mode,
         )
 
     def _stage_build(
         self, spec: BenchmarkSpec, plan: ExecutionPlan, preset: int
     ) -> tuple[Workload, tuple]:
         workload = spec.build_preset(preset, **plan.overrides_for(spec.name))
-        return workload, self._make_args(workload, plan)
+        return workload, workload.make_inputs(plan.seed)
 
-    def _make_args(self, workload: Workload, plan: ExecutionPlan) -> tuple:
-        args = workload.make_inputs(plan.seed)
-        if plan.devices > 1 and not workload.meta.get("no_jit"):
-            from repro.runtime.sharding import data_mesh, replicate
+    def _resolve_placement(
+        self, workload: Workload, args: tuple, requested: Placement
+    ) -> Placement:
+        """The *effective* placement, from shapes alone (no transfers):
+        shard requests degrade to replicate for workloads that opt out of
+        ``batch_dims`` (or whose dims don't divide), and no_jit host-
+        transfer workloads always run — and are recorded — on one device."""
+        if workload.meta.get("no_jit"):
+            return Placement(devices=1, mode="replicate")
+        if requested.devices == 1:
+            return Placement(devices=1, mode="replicate")
+        if requested.mode == "shard":
+            from repro.runtime.sharding import shard_applies
 
-            args = replicate(args, data_mesh(plan.devices))
-        return args
+            if shard_applies(args, workload, requested.devices):
+                return requested
+        return Placement(devices=requested.devices, mode="replicate")
+
+    def _stage_place(
+        self, workload: Workload, args: tuple, requested: Placement
+    ) -> tuple[tuple, Placement]:
+        """Put inputs where the placement says; the effective placement
+        joins the compile-cache key."""
+        placement = self._resolve_placement(workload, args, requested)
+        if placement.devices == 1:
+            return args, placement
+        from repro.runtime.sharding import data_mesh, place_args
+
+        mesh = data_mesh(placement.devices)
+        placed, mode = place_args(args, workload, mesh, placement.mode)
+        assert mode == placement.mode, (mode, placement)
+        return placed, placement
 
     def _stage_compile(
         self,
@@ -154,11 +205,12 @@ class Engine:
         plan: ExecutionPlan,
         preset: int,
         backward: bool,
+        placement: Placement,
     ) -> _CacheEntry:
         fn = workload.fn_bwd if backward else workload.fn
         if backward and fn is None:
             raise ValueError(f"workload {workload.name!r} has no backward pass")
-        key = self._cache_key(spec, plan, preset, backward)
+        key = self._cache_key(spec, plan, preset, backward, placement)
 
         def build() -> _CacheEntry:
             if workload.meta.get("no_jit"):
@@ -213,16 +265,37 @@ class Engine:
         shares executables with full runs of the same plan parameters. A
         warm cache with memoized analysis returns without building the
         workload or its inputs; pass ``workload`` to reuse one already built.
+
+        Uses the plan placement at ``plan.devices`` (not the sweep): the
+        cache key needs the effective placement, which for a shard request
+        depends on the workload's ``batch_dims`` and input shapes — so a
+        shard-mode lookup builds the workload (shapes only, no transfers)
+        to resolve the key; inputs are placed on devices only on a miss.
         """
         preset = plan.resolve_preset(spec)
-        cached = self.cache.peek(self._cache_key(spec, plan, preset, backward))
+        requested = plan.placement_at(plan.devices)
+        if requested.mode == "replicate":
+            # Effective == requested without building the workload.
+            cached = self.cache.peek(
+                self._cache_key(spec, plan, preset, backward, requested)
+            )
+            if cached is not None and cached.info is not None:
+                self.cache.hits += 1
+                return cached.info
+        if workload is None:
+            workload = spec.build_preset(preset, **plan.overrides_for(spec.name))
+        args = workload.make_inputs(plan.seed)
+        placement = self._resolve_placement(workload, args, requested)
+        cached = self.cache.peek(
+            self._cache_key(spec, plan, preset, backward, placement)
+        )
         if cached is not None and cached.info is not None:
             self.cache.hits += 1
             return cached.info
-        if workload is None:
-            workload = spec.build_preset(preset, **plan.overrides_for(spec.name))
-        args = self._make_args(workload, plan)
-        entry = self._stage_compile(spec, workload, args, plan, preset, backward)
+        args, placement = self._stage_place(workload, args, requested)
+        entry = self._stage_compile(
+            spec, workload, args, plan, preset, backward, placement
+        )
         return self._stage_characterize(workload, entry, backward)
 
     # -- orchestration -----------------------------------------------------
@@ -236,49 +309,97 @@ class Engine:
         verbose: bool = False,
     ) -> RunResult:
         specs = plan.select()
-        if plan.devices > jax.device_count():
-            raise ValueError(
-                f"plan requests {plan.devices} devices but only "
-                f"{jax.device_count()} available"
+        available = jax.device_count()
+        want = max(plan.device_sweep)
+        if want > available:
+            raise PlanError(
+                f"plan requests {want} devices but only "
+                f"{available} available"
             )
-        metadata = RunMetadata.capture(preset=plan.preset, devices=plan.devices)
+        metadata = RunMetadata.capture(
+            preset=plan.preset,
+            devices=plan.devices,
+            placement=plan.placement.mode,
+            device_sweep=plan.device_sweep,
+        )
         writer = JsonlReportWriter(jsonl_path, metadata) if jsonl_path else None
         records: list[BenchmarkRecord] = []
+        sweep_stats: list[SweepStat] = []
+        # 1-device us_per_call per row name: the scaling baseline. The sweep
+        # is sorted ascending, so baselines exist before multi-device rows
+        # stream out.
+        baseline_us: dict[str, float] = {}
 
         def emit(rec: BenchmarkRecord) -> None:
+            if rec.status == "ok":
+                if rec.devices == 1:
+                    baseline_us[rec.name] = rec.us_per_call
+                elif rec.name in baseline_us and rec.us_per_call > 0:
+                    rec.scaling_efficiency = (
+                        baseline_us[rec.name] / rec.us_per_call / rec.devices
+                    )
             records.append(rec)
             if writer is not None:
                 writer.write(rec)
             if verbose:
                 print(rec.csv(), flush=True)
 
+        if verbose:
+            print(BenchmarkRecord.csv_header(), flush=True)
         try:
-            for spec in specs:
-                for rec in self._run_benchmark(spec, plan):
-                    emit(rec)
+            for devices in plan.device_sweep:
+                misses0, hits0 = self.cache.misses, self.cache.hits
+                for spec in specs:
+                    for rec in self._run_benchmark(spec, plan, devices):
+                        emit(rec)
+                sweep_stats.append(
+                    SweepStat(
+                        devices=devices,
+                        misses=self.cache.misses - misses0,
+                        hits=self.cache.hits - hits0,
+                    )
+                )
         finally:
             if writer is not None:
                 writer.close()
         if report_path:
             write_report(records, report_path)
-        return RunResult(records=records, metadata=metadata, cache=self.cache)
+        return RunResult(
+            records=records,
+            metadata=metadata,
+            cache=self.cache,
+            sweep_stats=sweep_stats,
+        )
 
     def _run_benchmark(
-        self, spec: BenchmarkSpec, plan: ExecutionPlan
+        self, spec: BenchmarkSpec, plan: ExecutionPlan, devices: int
     ) -> list[BenchmarkRecord]:
         preset = plan.resolve_preset(spec)
+        requested = plan.placement_at(devices)
         try:
             workload, args = self._stage_build(spec, plan, preset)
         except Exception as e:  # noqa: BLE001 — fault isolation is the contract
             return [
                 BenchmarkRecord.from_error(
-                    spec, preset, stage="build", error=_err_text(e)
+                    spec, preset, stage="build", error=_err_text(e),
+                    devices=devices, placement=requested.mode,
+                )
+            ]
+        try:
+            args, placement = self._stage_place(workload, args, requested)
+        except Exception as e:  # noqa: BLE001 — fault isolation is the contract
+            return [
+                BenchmarkRecord.from_error(
+                    spec, preset, stage="place", error=_err_text(e),
+                    devices=devices, placement=requested.mode,
                 )
             ]
         out: list[BenchmarkRecord] = []
         for backward in plan.passes(workload):
             out.append(
-                self._run_pass(spec, workload, args, plan, preset, backward)
+                self._run_pass(
+                    spec, workload, args, plan, preset, backward, placement
+                )
             )
         return out
 
@@ -290,18 +411,25 @@ class Engine:
         plan: ExecutionPlan,
         preset: int,
         backward: bool,
+        placement: Placement,
     ) -> BenchmarkRecord:
         stage = "compile"
         try:
-            entry = self._stage_compile(spec, workload, args, plan, preset, backward)
+            entry = self._stage_compile(
+                spec, workload, args, plan, preset, backward, placement
+            )
             stage = "measure"
             timing = self._stage_measure(workload, entry, args, plan, backward)
             stage = "characterize"
             info = self._stage_characterize(workload, entry, backward)
-            return BenchmarkRecord.from_measurement(spec, preset, timing, info)
+            return BenchmarkRecord.from_measurement(
+                spec, preset, timing, info,
+                devices=placement.devices, placement=placement.mode,
+            )
         except Exception as e:  # noqa: BLE001 — fault isolation is the contract
             return BenchmarkRecord.from_error(
-                spec, preset, stage=stage, error=_err_text(e), backward=backward
+                spec, preset, stage=stage, error=_err_text(e), backward=backward,
+                devices=placement.devices, placement=placement.mode,
             )
 
 

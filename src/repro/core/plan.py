@@ -4,8 +4,10 @@ An :class:`ExecutionPlan` is a frozen value object describing *what* to run
 (selection by level / name / tag / domain, or an explicit spec list), *at
 what size* (SHOC-style preset plus Rodinia-style per-benchmark overrides),
 *which passes* (forward, and backward where a workload defines one), *how to
-measure* (iters / warmup / seed), and *where* (``devices`` — replicated
-multi-device placement via ``runtime/sharding`` helpers).
+measure* (iters / warmup / seed), and *where* (a :class:`Placement` —
+device count plus mode, ``replicate`` or ``shard``, realized through
+``runtime/sharding`` helpers; ``device_sweep`` runs the same selection at
+several device counts for scaling curves).
 
 Plans carry no execution state: the engine (``core/engine.py``) consumes a
 plan, owns the compilation cache and the stage sequence, and emits records.
@@ -20,7 +22,43 @@ from typing import Any, Mapping, Sequence
 
 from repro.core.registry import BenchmarkSpec, Workload, all_benchmarks
 
-__all__ = ["ExecutionPlan"]
+__all__ = ["ExecutionPlan", "Placement", "PlanError", "PLACEMENT_MODES"]
+
+PLACEMENT_MODES = ("replicate", "shard")
+
+
+class PlanError(ValueError):
+    """A plan or placement that cannot be executed as configured (bad
+    selection, unknown mode, more devices than the host offers). CLIs treat
+    it as a configuration error — exit 2, no traceback."""
+
+
+@dataclasses.dataclass(frozen=True)
+class Placement:
+    """Where a plan runs: how many devices, and what lands on them.
+
+    - ``replicate``: every input is device_put fully replicated across the
+      data mesh — all devices do identical work (the pre-placement
+      behaviour of the old scalar ``devices`` knob).
+    - ``shard``: inputs of workloads that declare ``batch_dims`` are
+      partitioned along those dims across the data mesh (data parallelism);
+      workloads that opt out (``batch_dims=None``) fall back to replicate,
+      and the record says so.
+
+    A placement is part of the engine's compile-cache key: the sharded and
+    replicated lowerings of one workload are distinct executables.
+    """
+
+    devices: int = 1
+    mode: str = "replicate"
+
+    def __post_init__(self) -> None:
+        if self.devices < 1:
+            raise PlanError(f"placement devices must be >= 1, got {self.devices}")
+        if self.mode not in PLACEMENT_MODES:
+            raise PlanError(
+                f"placement mode must be one of {PLACEMENT_MODES}, got {self.mode!r}"
+            )
 
 
 def _freeze_value(name: str, param: str, value: Any) -> Any:
@@ -72,10 +110,16 @@ class ExecutionPlan:
     iters: int = 5
     warmup: int = 2
     seed: int = 0
-    # Replicated multi-device placement: inputs are device_put onto a 1-axis
-    # data mesh over the first `devices` devices before compilation, so the
-    # executable is lowered for that placement. 1 = single-device (default).
-    devices: int = 1
+    # Multi-device placement: a frozen Placement(devices, mode) value object.
+    # `devices=N` remains accepted as back-compat sugar for
+    # Placement(devices=N, mode="replicate"); after construction
+    # `plan.devices` always mirrors `plan.placement.devices`.
+    placement: Placement | None = None
+    devices: int | None = None
+    # Scaling sweep: run the selection once per device count (sorted
+    # ascending, deduplicated) under placement.mode, sharing the compile
+    # cache across counts. None = just (placement.devices,).
+    device_sweep: tuple[int, ...] | None = None
     # Escape hatch for tests and programmatic callers: bypass the registry
     # and run exactly these specs (selection filters are ignored).
     specs: tuple[BenchmarkSpec, ...] | None = None
@@ -94,8 +138,51 @@ class ExecutionPlan:
             raise ValueError(f"iters must be >= 1, got {self.iters}")
         if self.warmup < 0:
             raise ValueError(f"warmup must be >= 0, got {self.warmup}")
-        if self.devices < 1:
-            raise ValueError(f"devices must be >= 1, got {self.devices}")
+        self._resolve_placement()
+
+    def _resolve_placement(self) -> None:
+        placement = self.placement
+        if placement is None:
+            devices = 1 if self.devices is None else self.devices
+            if devices < 1:
+                raise PlanError(f"devices must be >= 1, got {devices}")
+            placement = Placement(devices=devices, mode="replicate")
+        elif isinstance(placement, int):  # Placement-shaped sugar
+            placement = Placement(devices=placement, mode="replicate")
+        elif not isinstance(placement, Placement):
+            raise PlanError(
+                f"placement must be a Placement (or int), got {placement!r}"
+            )
+        if self.devices is not None and self.devices != placement.devices:
+            raise PlanError(
+                f"conflicting device counts: devices={self.devices} vs "
+                f"placement.devices={placement.devices}; pass one or the other"
+            )
+        object.__setattr__(self, "placement", placement)
+        object.__setattr__(self, "devices", placement.devices)
+        sweep = self.device_sweep
+        if sweep is None:
+            sweep = (placement.devices,)
+        else:
+            if not isinstance(sweep, tuple):
+                sweep = tuple(sweep)
+            if not sweep:
+                raise PlanError("device_sweep is empty")
+            for n in sweep:
+                if not isinstance(n, int) or n < 1:
+                    raise PlanError(
+                        f"device_sweep entries must be ints >= 1, got {sweep}"
+                    )
+            # Ascending order puts the 1-device baseline first, so sweep
+            # records can carry scaling_efficiency as they stream out.
+            sweep = tuple(sorted(set(sweep)))
+        object.__setattr__(self, "device_sweep", sweep)
+
+    def placement_at(self, devices: int) -> Placement:
+        """The effective placement for one sweep step: the plan's mode at
+        ``devices`` (sharding over one device degenerates to replicate)."""
+        mode = self.placement.mode if devices > 1 else "replicate"
+        return Placement(devices=devices, mode=mode)
 
     # -- selection ---------------------------------------------------------
 

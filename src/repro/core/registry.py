@@ -13,6 +13,26 @@ applicable — the modern-platform feature it exercises. This module stores all
 of that metadata and the factory that instantiates a benchmark at a given
 problem size, so the suite runner, the preset system, and the report
 generators all consume one source of truth.
+
+**The ``batch_dims`` contract (for benchmark authors).** Multi-device runs
+are driven by a :class:`~repro.core.plan.Placement`; under ``mode="shard"``
+the engine partitions inputs across the data mesh using the workload's
+``batch_dims`` declaration:
+
+- ``batch_dims`` is a tuple with one entry per ``make_inputs`` output:
+  the input's data-parallel dimension index (almost always ``0``), or
+  ``None`` for inputs that must be replicated (weights, scalar state,
+  PRNG keys).
+- ``batch_dims=None`` (the default) opts the whole workload out of
+  sharding: its computation is not data-parallel along any input dim (BFS
+  frontier state, bitonic sort networks, DP wavefronts, host-bus
+  transfers). Sharded plans fall back to replication for it and the
+  result record says ``placement=replicate``.
+- Declaring a dim is a *semantic* statement — partitioning it must leave
+  the mathematical result unchanged (GSPMD inserts the collectives), so a
+  sharded and a replicated execution of the same workload agree
+  numerically. Dims that do not divide the device count are replicated
+  silently; pick preset sizes that divide common device counts (2, 4, 8).
 """
 
 from __future__ import annotations
@@ -43,6 +63,8 @@ class Workload:
     throughput (the compiled HLO numbers come from the harness separately and
     the two are cross-checked in tests). ``validate`` optionally checks
     outputs for correctness (the suite runs it once, outside timing).
+    ``batch_dims`` declares the per-input data-parallel dims for sharded
+    placements — see the module docstring for the contract.
     """
 
     name: str
@@ -54,7 +76,17 @@ class Workload:
     # Differentiable workloads (the DNN section) also expose a backward fn.
     fn_bwd: Callable[..., Any] | None = None
     flops_bwd: float = 0.0
+    # Per-input batch dim (None entry = replicate that input); None for the
+    # whole field = non-batchable, sharded plans fall back to replicate.
+    batch_dims: tuple[int | None, ...] | None = None
     meta: dict = dataclasses.field(default_factory=dict)
+
+    @property
+    def batchable(self) -> bool:
+        """True when a sharded placement can partition at least one input."""
+        return self.batch_dims is not None and any(
+            d is not None for d in self.batch_dims
+        )
 
 
 @dataclasses.dataclass(frozen=True)

@@ -37,7 +37,8 @@ __all__ = [
 ]
 
 # Bump when BenchmarkRecord/RunMetadata fields change incompatibly.
-SCHEMA_VERSION = 1
+# v2: placement-aware rows — devices / placement / scaling_efficiency.
+SCHEMA_VERSION = 2
 
 
 @dataclasses.dataclass
@@ -46,7 +47,12 @@ class BenchmarkRecord:
 
     ``status`` is ``"ok"`` for measured rows and ``"error"`` for rows the
     engine emitted after a per-benchmark failure (``error`` holds the stage
-    and exception text; the numeric fields are zeroed).
+    and exception text; the numeric fields are zeroed). ``devices`` /
+    ``placement`` record where the row actually ran (``placement`` is the
+    *effective* mode: a sharded plan over a non-batchable workload reads
+    ``replicate``); ``scaling_efficiency`` is speedup over the same run's
+    1-device row divided by the device count (None when no baseline row
+    exists, e.g. single-count runs or a failed baseline).
     """
 
     name: str
@@ -63,6 +69,9 @@ class BenchmarkRecord:
     derived: str = ""
     status: str = "ok"
     error: str = ""
+    devices: int = 1
+    placement: str = "replicate"
+    scaling_efficiency: float | None = None
 
     @classmethod
     def from_measurement(
@@ -71,6 +80,9 @@ class BenchmarkRecord:
         preset: int,
         timing: TimingResult,
         compiled: CompiledInfo,
+        *,
+        devices: int = 1,
+        placement: str = "replicate",
     ) -> "BenchmarkRecord":
         r = compiled.roofline
         bound = r.bound_s if r.bound_s > 0 else 1.0
@@ -90,6 +102,8 @@ class BenchmarkRecord:
                 f"flops={r.flops:.3e};bytes={r.hbm_bytes:.3e};"
                 f"coll={r.collective_bytes:.3e}"
             ),
+            devices=devices,
+            placement=placement,
         )
 
     @classmethod
@@ -101,6 +115,8 @@ class BenchmarkRecord:
         stage: str,
         error: str,
         backward: bool = False,
+        devices: int = 1,
+        placement: str = "replicate",
     ) -> "BenchmarkRecord":
         return cls(
             name=spec.name + (".bwd" if backward else ""),
@@ -117,12 +133,29 @@ class BenchmarkRecord:
             derived=f"stage={stage}",
             status="error",
             error=error,
+            devices=devices,
+            placement=placement,
         )
 
+    @classmethod
+    def csv_header(cls) -> str:
+        return "name,us_per_call,devices,placement,derived"
+
     def csv(self) -> str:
+        eff = (
+            f";eff={self.scaling_efficiency:.3f}"
+            if self.scaling_efficiency is not None
+            else ""
+        )
         if self.status != "ok":
-            return f"{self.name},0.00,{self.status}:{self.derived}"
-        return f"{self.name},{self.us_per_call:.2f},{self.derived}"
+            return (
+                f"{self.name},0.00,{self.devices},{self.placement},"
+                f"{self.status}:{self.derived}"
+            )
+        return (
+            f"{self.name},{self.us_per_call:.2f},{self.devices},"
+            f"{self.placement},{self.derived}{eff}"
+        )
 
 
 @dataclasses.dataclass(frozen=True)
@@ -135,9 +168,24 @@ class RunMetadata:
     schema_version: int = SCHEMA_VERSION
     preset: int | None = None
     devices: int = 1
+    placement: str = "replicate"
+    device_sweep: tuple[int, ...] = (1,)
+
+    def __post_init__(self) -> None:
+        # JSON round-trips tuples as lists; normalize so loaded metadata
+        # compares equal to captured metadata.
+        if not isinstance(self.device_sweep, tuple):
+            object.__setattr__(self, "device_sweep", tuple(self.device_sweep))
 
     @classmethod
-    def capture(cls, *, preset: int | None = None, devices: int = 1) -> "RunMetadata":
+    def capture(
+        cls,
+        *,
+        preset: int | None = None,
+        devices: int = 1,
+        placement: str = "replicate",
+        device_sweep: tuple[int, ...] | None = None,
+    ) -> "RunMetadata":
         import jax
 
         return cls(
@@ -146,11 +194,13 @@ class RunMetadata:
             jax_version=jax.__version__,
             preset=preset,
             devices=devices,
+            placement=placement,
+            device_sweep=device_sweep if device_sweep is not None else (devices,),
         )
 
 
 def to_csv_lines(records: Iterable[BenchmarkRecord]) -> list[str]:
-    return ["name,us_per_call,derived"] + [r.csv() for r in records]
+    return [BenchmarkRecord.csv_header()] + [r.csv() for r in records]
 
 
 def write_report(records: Sequence[BenchmarkRecord], path: str) -> None:

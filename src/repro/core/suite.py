@@ -3,13 +3,18 @@
 ``run_suite`` is what `examples/run_suite.py` and `python -m repro.core.suite`
 invoke. Since the plan/engine refactor it only *assembles* an
 :class:`~repro.core.plan.ExecutionPlan` (selection by level / name / tag /
-domain, preset + overrides, passes, iters/warmup, device placement) and hands
-it to the module-level :class:`~repro.core.engine.Engine`, which owns the
-stage sequence (build → compile → measure → characterize → report), the
-compile-once cache shared by every caller in the process, and per-benchmark
-fault isolation. Output is the paper's Fig.-5-style table plus a
-machine-readable JSON report and/or a streaming JSONL report with run
-metadata.
+domain, preset + overrides, passes, iters/warmup, device placement and
+scaling sweep) and hands it to the module-level
+:class:`~repro.core.engine.Engine`, which owns the stage sequence (build →
+place → compile → measure → characterize → report), the compile-once cache
+shared by every caller in the process, and per-benchmark fault isolation.
+Output is the paper's Fig.-5-style table plus a machine-readable JSON report
+and/or a streaming JSONL report with run metadata.
+
+Placement flags: ``--placement {replicate,shard}`` picks what multi-device
+runs put on each device; ``--scale-devices 1,2,4`` sweeps the selection
+across device counts, producing one record per (benchmark, pass, count)
+with ``scaling_efficiency`` on the multi-device rows.
 """
 
 from __future__ import annotations
@@ -19,7 +24,7 @@ import sys
 from typing import Any, Mapping, Sequence
 
 from repro.core.engine import Engine
-from repro.core.plan import ExecutionPlan
+from repro.core.plan import PLACEMENT_MODES, ExecutionPlan, Placement, PlanError
 from repro.core.results import BenchmarkRecord, to_csv_lines
 
 __all__ = ["run_suite", "main", "DEFAULT_ENGINE"]
@@ -42,6 +47,8 @@ def run_suite(
     include_backward: bool = True,
     seed: int = 0,
     devices: int = 1,
+    placement: str = "replicate",
+    scale_devices: Sequence[int] | None = None,
     report_path: str | None = None,
     jsonl_path: str | None = None,
     verbose: bool = True,
@@ -58,7 +65,8 @@ def run_suite(
         iters=iters,
         warmup=warmup,
         seed=seed,
-        devices=devices,
+        placement=Placement(devices=devices, mode=placement),
+        device_sweep=tuple(scale_devices) if scale_devices is not None else None,
     )
     result = (engine or DEFAULT_ENGINE).run(
         plan, report_path=report_path, jsonl_path=jsonl_path, verbose=verbose
@@ -86,6 +94,21 @@ def _parse_overrides(items: Sequence[str]) -> dict[str, dict[str, Any]]:
     return out
 
 
+def _parse_scale_devices(text: str | None) -> tuple[int, ...] | None:
+    """``"1,2,4"`` -> (1, 2, 4)."""
+    if text is None:
+        return None
+    try:
+        counts = tuple(int(part) for part in text.split(",") if part.strip())
+    except ValueError:
+        raise SystemExit(
+            f"bad --scale-devices {text!r}; expected comma-separated ints, e.g. 1,2,4"
+        )
+    if not counts:
+        raise SystemExit(f"bad --scale-devices {text!r}; no device counts given")
+    return counts
+
+
 def main(argv: Sequence[str] | None = None) -> int:
     ap = argparse.ArgumentParser(description="Run the Mirovia/Altis suite")
     ap.add_argument("--levels", type=int, nargs="*", default=[0, 1, 2])
@@ -100,7 +123,15 @@ def main(argv: Sequence[str] | None = None) -> int:
     ap.add_argument("--warmup", type=int, default=2)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--devices", type=int, default=1,
-                    help="replicate inputs over the first N devices")
+                    help="run on the first N devices")
+    ap.add_argument("--placement", choices=PLACEMENT_MODES, default="replicate",
+                    help="what multi-device runs put on each device: full "
+                         "copies (replicate) or batch_dims-partitioned "
+                         "inputs (shard)")
+    ap.add_argument("--scale-devices", type=str, default=None,
+                    metavar="N1,N2,...",
+                    help="device-scaling sweep, e.g. 1,2,4,8: one record "
+                         "per (benchmark, pass, count)")
     ap.add_argument("--no-backward", action="store_true")
     ap.add_argument("--report", type=str, default=None, help="JSON report path")
     ap.add_argument("--jsonl", type=str, default=None,
@@ -108,8 +139,18 @@ def main(argv: Sequence[str] | None = None) -> int:
     args = ap.parse_args(argv)
     try:
         records = _run_cli(args)
-    except ValueError as e:  # bad selection / devices: config error, not a crash
+    except (PlanError, ValueError) as e:
+        # Bad selection / placement / device count: a configuration error,
+        # not a crash — exit 2 (the benchmarks/run.py --sections convention)
+        # telling the operator what this host actually has.
+        import jax
+
         print(f"error: {e}", file=sys.stderr)
+        print(
+            f"available devices: {jax.device_count()} "
+            f"(backend={jax.default_backend()})",
+            file=sys.stderr,
+        )
         return 2
     for line in to_csv_lines(records):
         print(line)
@@ -131,6 +172,8 @@ def _run_cli(args) -> list[BenchmarkRecord]:
         warmup=args.warmup,
         seed=args.seed,
         devices=args.devices,
+        placement=args.placement,
+        scale_devices=_parse_scale_devices(args.scale_devices),
         include_backward=not args.no_backward,
         report_path=args.report,
         jsonl_path=args.jsonl,

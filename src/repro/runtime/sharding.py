@@ -47,6 +47,9 @@ __all__ = [
     "make_activation_sharder",
     "data_mesh",
     "replicate",
+    "workload_pspecs",
+    "shard_applies",
+    "place_args",
     "shard_map",
     "pvary",
 ]
@@ -255,8 +258,8 @@ def make_activation_sharder(rules: ShardingRules):
 def data_mesh(n_devices: int | None = None, axis: str = "data") -> Mesh:
     """A 1-axis mesh over the first ``n_devices`` devices (all by default).
 
-    The benchmark engine's ``devices`` knob uses this for replicated
-    multi-device scenarios; model code uses the richer meshes in launch/.
+    The benchmark engine's placement stage builds its data mesh here (both
+    replicate and shard modes); model code uses the richer meshes in launch/.
     """
     devs = jax.devices()
     n = len(devs) if n_devices is None else n_devices
@@ -271,6 +274,73 @@ def replicate(tree: Any, mesh: Mesh) -> Any:
     """device_put every array leaf fully replicated across ``mesh``."""
     s = NamedSharding(mesh, P())
     return jax.tree.map(lambda x: jax.device_put(x, s), tree)
+
+
+def workload_pspecs(workload, mesh: Mesh, axis: str = "data") -> tuple:
+    """Per-input :class:`NamedSharding` tuple from a workload's
+    ``batch_dims`` declaration (the engine's shard-mode placement).
+
+    Each declared dim becomes ``axis`` at that position; ``None`` entries
+    (and every input of a non-batchable workload) replicate. Divisibility
+    of the actual shapes is checked at placement time (``place_args``),
+    not here — this is the pure declaration→sharding mapping.
+    """
+    dims = workload.batch_dims
+    if dims is None:
+        raise ValueError(
+            f"workload {workload.name!r} declares no batch_dims; "
+            "sharded placement must fall back to replicate"
+        )
+
+    def sharding(dim: int | None) -> NamedSharding:
+        if dim is None:
+            return NamedSharding(mesh, P())
+        return NamedSharding(mesh, P(*([None] * dim), axis))
+
+    return tuple(sharding(d) for d in dims)
+
+
+def shard_applies(args: tuple, workload, n_devices: int) -> bool:
+    """Shape-only check: would a ``shard`` placement actually partition
+    anything? No device transfers — callers (e.g. cache-key resolution)
+    can answer this without placing a byte.
+    """
+    if not getattr(workload, "batchable", False):
+        return False
+    if len(workload.batch_dims) != len(args):
+        raise ValueError(
+            f"workload {workload.name!r} declares {len(workload.batch_dims)} "
+            f"batch_dims but make_inputs produced {len(args)} inputs"
+        )
+    for arg, dim in zip(args, workload.batch_dims):
+        shape = getattr(arg, "shape", ())
+        if dim is not None and len(shape) > dim and shape[dim] % n_devices == 0:
+            return True
+    return False
+
+
+def place_args(args: tuple, workload, mesh: Mesh, mode: str) -> tuple[tuple, str]:
+    """Place workload inputs on ``mesh`` per the requested placement mode.
+
+    Returns ``(placed_args, effective_mode)``: a ``shard`` request on a
+    workload without ``batch_dims`` — or whose declared dims don't divide
+    the mesh — degrades to ``replicate``, and the caller records the mode
+    that actually happened.
+    """
+    if mode == "shard" and shard_applies(args, workload, mesh.size):
+        shardings = workload_pspecs(workload, mesh)
+        n = mesh.size
+        placed = []
+        for arg, dim, s in zip(args, workload.batch_dims, shardings):
+            shape = getattr(arg, "shape", ())
+            if dim is not None and len(shape) > dim and shape[dim] % n == 0:
+                placed.append(jax.device_put(arg, s))
+            else:
+                placed.append(jax.device_put(arg, NamedSharding(mesh, P())))
+        return tuple(placed), "shard"
+    # Non-batchable, or every declared dim failed the divisibility check:
+    # this is a plain replicated run and must share its compile-cache entry.
+    return replicate(args, mesh), "replicate"
 
 
 def named(mesh: Mesh, spec_tree):

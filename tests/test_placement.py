@@ -1,0 +1,292 @@
+"""Placement layer: batch_dims declarations, shard-vs-replicate numerics,
+device-scaling sweeps, and the suite CLI's placement surface.
+
+Multi-device cases run in subprocesses with forced host devices
+(``XLA_FLAGS=--xla_force_host_platform_device_count=8``) so the parent
+pytest process keeps the real single-CPU device view — the same pattern as
+test_distributed.py. Plan/record-shape cases run in-process on one device.
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+from repro.core.plan import ExecutionPlan, Placement, PlanError
+from repro.core.registry import Workload, all_benchmarks, get_benchmark
+from repro.core.results import SCHEMA_VERSION, BenchmarkRecord
+
+_SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _run(script: str, devices: int = 8, timeout: int = 420) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = _SRC
+    out = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(script)],
+        env=env, capture_output=True, text=True, timeout=timeout,
+    )
+    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
+    return out.stdout
+
+
+# -- plan / placement value objects (single device, in-process) ------------
+
+
+def test_placement_validation():
+    with pytest.raises(PlanError, match="mode"):
+        Placement(devices=2, mode="bogus")
+    with pytest.raises(PlanError, match="devices"):
+        Placement(devices=0)
+
+
+def test_plan_devices_backcompat_builds_replicate_placement():
+    plan = ExecutionPlan(devices=2)
+    assert plan.placement == Placement(devices=2, mode="replicate")
+    assert plan.devices == 2
+    assert plan.device_sweep == (2,)
+
+
+def test_plan_placement_conflicts_with_devices():
+    with pytest.raises(PlanError, match="conflicting"):
+        ExecutionPlan(devices=2, placement=Placement(devices=4))
+
+
+def test_plan_device_sweep_normalizes_sorted_unique():
+    plan = ExecutionPlan(device_sweep=(4, 1, 2, 2))
+    assert plan.device_sweep == (1, 2, 4)
+    with pytest.raises(PlanError, match="device_sweep"):
+        ExecutionPlan(device_sweep=())
+    with pytest.raises(PlanError, match="device_sweep"):
+        ExecutionPlan(device_sweep=(0,))
+
+
+def test_placement_at_degenerates_to_replicate_on_one_device():
+    plan = ExecutionPlan(placement=Placement(devices=1, mode="shard"),
+                         device_sweep=(1, 4))
+    assert plan.placement_at(1).mode == "replicate"
+    assert plan.placement_at(4).mode == "shard"
+
+
+def test_batch_dims_declarations_match_input_arity():
+    """Every declared batch_dims tuple lines up with make_inputs' arity and
+    points at a real dimension of the corresponding input."""
+    checked = 0
+    for spec in all_benchmarks():
+        w = spec.build_preset(0)
+        if w.batch_dims is None:
+            continue
+        args = w.make_inputs(0)
+        assert len(w.batch_dims) == len(args), spec.name
+        for dim, arg in zip(w.batch_dims, args):
+            if dim is None:
+                continue
+            assert hasattr(arg, "shape") and len(arg.shape) > dim, spec.name
+        checked += 1
+    assert checked >= 5  # the batchable sample exists
+
+
+def test_expected_batchability_split():
+    batchable = {"gemm_f32_nn", "kmeans", "maxflops_bf16", "devicemem_stream",
+                 "softmax", "connected", "activation", "mandelbrot_flat"}
+    non_batchable = {"bfs", "sort", "gups", "nw", "busspeeddownload",
+                     "mandelbrot_ms", "gemm_f32_tn"}
+    for name in batchable:
+        assert get_benchmark(name).build_preset(0).batchable, name
+    for name in non_batchable:
+        assert not get_benchmark(name).build_preset(0).batchable, name
+
+
+def test_record_schema_carries_placement_columns():
+    assert SCHEMA_VERSION >= 2
+    fields = {f.name for f in __import__("dataclasses").fields(BenchmarkRecord)}
+    assert {"devices", "placement", "scaling_efficiency"} <= fields
+    assert BenchmarkRecord.csv_header().startswith("name,us_per_call,")
+
+
+def test_verbose_run_emits_csv_header_once_before_rows(capsys):
+    from repro.core.engine import Engine
+
+    Engine().run(
+        ExecutionPlan(names=("devicemem_stream",), preset=0, iters=1,
+                      warmup=0, include_backward=False),
+        verbose=True,
+    )
+    lines = [ln for ln in capsys.readouterr().out.splitlines() if ln]
+    assert lines[0] == BenchmarkRecord.csv_header()
+    assert len(lines) == 2  # header + one row, header not repeated
+    assert lines[1].startswith("devicemem.stream")
+
+
+def test_suite_cli_exits_2_with_device_count_on_bad_placement(capsys):
+    from repro.core.suite import main
+
+    rc = main(["--names", "gemm_f32_nn", "--devices", "4096"])
+    assert rc == 2
+    err = capsys.readouterr().err
+    assert "4096" in err
+    assert "available devices:" in err
+
+    rc = main(["--names", "gemm_f32_nn", "--scale-devices", "1,4096"])
+    assert rc == 2
+
+
+def test_workload_pspecs_requires_declaration():
+    from repro.runtime.sharding import data_mesh, workload_pspecs
+
+    w = Workload(name="opted_out", fn=lambda x: x,
+                 make_inputs=lambda seed: (1.0,))
+    with pytest.raises(ValueError, match="batch_dims"):
+        workload_pspecs(w, data_mesh(1))
+
+
+def test_batch_dims_arity_mismatch_fails_at_placement_boundary():
+    import jax.numpy as jnp
+
+    from repro.runtime.sharding import data_mesh, place_args
+
+    w = Workload(name="bad_arity", fn=lambda x, y: x + y,
+                 make_inputs=lambda seed: (jnp.zeros(4), jnp.zeros(4)),
+                 batch_dims=(0,))  # declares 1 dim for 2 inputs
+    with pytest.raises(ValueError, match="declares 1 batch_dims"):
+        place_args(w.make_inputs(0), w, data_mesh(1), "shard")
+
+
+# -- multi-device behaviour (forced-8-device subprocesses) -----------------
+
+
+def test_sharded_matches_replicated_outputs():
+    """Sharding a declared batch dim is placement, not semantics: sharded
+    and replicated executions of batchable benchmarks agree numerically."""
+    _run("""
+        import numpy as np, jax
+        from repro.core.registry import get_benchmark
+        from repro.runtime.sharding import data_mesh, place_args
+
+        mesh = data_mesh(8)
+        # bf16 chains re-tile per shard shape, shifting accumulation order
+        # by ~1 ulp; f32 elementwise/row-parallel cases stay tight.
+        tols = {"maxflops_bf16": dict(rtol=2e-2, atol=5e-3)}
+        for name in ("gemm_f32_nn", "devicemem_stream", "activation",
+                     "connected", "kmeans", "maxflops_bf16"):
+            w = get_benchmark(name).build_preset(0)
+            args = w.make_inputs(0)
+            sharded_args, mode = place_args(args, w, mesh, "shard")
+            assert mode == "shard", (name, mode)
+            replicated_args, rmode = place_args(args, w, mesh, "replicate")
+            assert rmode == "replicate", (name, rmode)
+            out_s = jax.jit(w.fn).lower(*sharded_args).compile()(*sharded_args)
+            out_r = jax.jit(w.fn).lower(*replicated_args).compile()(*replicated_args)
+            tol = tols.get(name, dict(rtol=2e-5, atol=2e-5))
+            for a, b in zip(jax.tree.leaves(out_s), jax.tree.leaves(out_r)):
+                np.testing.assert_allclose(
+                    np.asarray(a, dtype=np.float64),
+                    np.asarray(b, dtype=np.float64),
+                    err_msg=name, **tol,
+                )
+        print("OK")
+    """)
+
+
+def test_sweep_records_devices_placement_and_efficiency():
+    """A shard-mode sweep yields one record per (benchmark, pass, count)
+    with correct devices/placement columns, populated scaling_efficiency on
+    multi-device rows, replicate fallback for opted-out workloads, and
+    monotone non-increasing compile-cache misses across the sweep."""
+    _run("""
+        from repro.core.engine import Engine
+        from repro.core.plan import ExecutionPlan, Placement
+
+        eng = Engine()
+        plan = ExecutionPlan(
+            names=("gemm_f32_nn", "bfs", "softmax"), preset=0, iters=1,
+            warmup=0, include_backward=True,
+            placement=Placement(devices=1, mode="shard"),
+            device_sweep=(1, 2, 4),
+        )
+        res = eng.run(plan)
+        assert not res.error_records, [(r.name, r.error) for r in res.error_records]
+        # one record per (benchmark, pass, device count): 4 rows x 3 counts
+        assert len(res.records) == 12, [r.name for r in res.records]
+        for r in res.records:
+            assert r.devices in (1, 2, 4), r
+            base = r.name.split(".")[0]
+            if r.devices == 1 or base == "bfs":
+                assert r.placement == "replicate", r
+            else:
+                assert r.placement == "shard", r
+            if r.devices > 1:
+                assert r.scaling_efficiency is not None and r.scaling_efficiency > 0, r
+            else:
+                assert r.scaling_efficiency is None, r
+        misses = [s.misses for s in res.sweep_stats]
+        assert [s.devices for s in res.sweep_stats] == [1, 2, 4]
+        assert all(m2 <= m1 for m1, m2 in zip(misses, misses[1:])), misses
+        print("OK")
+    """)
+
+
+def test_jsonl_sweep_report_roundtrips_placement():
+    _run("""
+        import tempfile, os
+        from repro.core.engine import Engine
+        from repro.core.plan import ExecutionPlan, Placement
+        from repro.core.results import load_run
+
+        path = os.path.join(tempfile.mkdtemp(), "sweep.jsonl")
+        plan = ExecutionPlan(
+            names=("kmeans",), preset=0, iters=1, warmup=0,
+            include_backward=False,
+            placement=Placement(devices=1, mode="shard"), device_sweep=(1, 2),
+        )
+        res = Engine().run(plan, jsonl_path=path)
+        meta, recs = load_run(path)
+        assert meta.placement == "shard" and meta.device_sweep == (1, 2), meta
+        assert recs == res.records
+        assert [r.devices for r in recs] == [1, 2]
+        assert recs[1].scaling_efficiency is not None
+        print("OK")
+    """)
+
+
+def test_no_jit_sweep_rows_stay_single_device():
+    """Host-bus transfers never run on more than one device: their sweep
+    rows must say devices=1 with no fabricated scaling_efficiency (and
+    share one compile-cache entry across the sweep)."""
+    _run("""
+        from repro.core.engine import Engine
+        from repro.core.plan import ExecutionPlan, Placement
+
+        eng = Engine()
+        res = eng.run(ExecutionPlan(
+            names=("busspeeddownload",), preset=0, iters=1, warmup=0,
+            include_backward=False,
+            placement=Placement(devices=1, mode="shard"), device_sweep=(1, 2, 4),
+        ))
+        assert not res.error_records, res.error_records
+        assert [r.devices for r in res.records] == [1, 1, 1], res.records
+        assert all(r.placement == "replicate" for r in res.records)
+        assert all(r.scaling_efficiency is None for r in res.records)
+        assert eng.cache.misses == 1, eng.cache.misses
+        print("OK")
+    """)
+
+
+def test_replicated_sweep_still_measures_redundant_work():
+    """Back-compat: replicate mode replicates every workload at every
+    count — no shard placements appear anywhere."""
+    _run("""
+        from repro.core.engine import Engine
+        from repro.core.plan import ExecutionPlan
+
+        res = Engine().run(ExecutionPlan(
+            names=("gemm_f32_nn",), preset=0, iters=1, warmup=0,
+            include_backward=False, device_sweep=(1, 2),
+        ))
+        assert not res.error_records
+        assert [r.placement for r in res.records] == ["replicate", "replicate"]
+        print("OK")
+    """)

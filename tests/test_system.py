@@ -10,7 +10,7 @@ import jax
 def test_suite_end_to_end(tmp_path):
     """The paper's workflow: run a suite slice, get the Fig-5-style table."""
     from repro.core import run_suite
-    from repro.core.results import load_records, to_csv_lines
+    from repro.core.results import BenchmarkRecord, load_records, to_csv_lines
 
     records = run_suite(
         names=["gemm_bf16_nn", "srad", "softmax"],
@@ -19,7 +19,8 @@ def test_suite_end_to_end(tmp_path):
     )
     assert len(records) >= 3  # softmax contributes fwd+bwd
     lines = to_csv_lines(records)
-    assert lines[0] == "name,us_per_call,derived"
+    assert lines[0] == BenchmarkRecord.csv_header()
+    assert lines[0] == "name,us_per_call,devices,placement,derived"
     assert all("," in ln for ln in lines[1:])
     assert load_records(str(tmp_path / "suite.json"))
 

@@ -1,12 +1,49 @@
 #!/usr/bin/env bash
 # CI smoke: run a preset-0 suite slice through the staged engine with a
 # streaming JSONL report, verify the report loads back, then tier-1 pytest.
+#
+# With --multi-device, instead run the placement smoke: force 8 host
+# devices and drive a sharded device-scaling sweep, asserting zero
+# status=error records and populated scaling_efficiency columns.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 out="$(mktemp -d)"
 trap 'rm -rf "$out"' EXIT
+
+if [[ "${1:-}" == "--multi-device" ]]; then
+  export XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}"
+
+  python -m repro.core.suite \
+    --levels 1 --preset 0 --iters 1 --warmup 0 --no-backward \
+    --placement shard --scale-devices 1,2,4 \
+    --jsonl "$out/scaling.jsonl"
+
+  python - "$out/scaling.jsonl" <<'PY'
+import sys
+
+from repro.core.results import load_run
+
+meta, records = load_run(sys.argv[1])
+assert meta is not None and meta.placement == "shard", meta
+assert meta.device_sweep == (1, 2, 4), meta
+bad = [r for r in records if r.status == "error"]
+for r in bad:
+    print(f"ERROR {r.name}: {r.error}", file=sys.stderr)
+assert not bad, f"{len(bad)} error records in the scaling sweep"
+counts = sorted({r.devices for r in records})
+assert counts == [1, 2, 4], counts
+multi = [r for r in records if r.devices > 1]
+assert multi and all(r.scaling_efficiency is not None for r in multi), (
+    "multi-device rows missing scaling_efficiency")
+sharded = [r for r in multi if r.placement == "shard"]
+assert sharded, "no workload actually sharded in the sweep"
+print(f"multi-device smoke: {len(records)} records over counts {counts}, "
+      f"{len(sharded)} sharded rows, 0 errors")
+PY
+  exit 0
+fi
 
 python -m repro.core.suite \
   --levels 0 1 --preset 0 --iters 1 --warmup 0 --no-backward \
