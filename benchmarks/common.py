@@ -22,6 +22,13 @@ def fmt(rows: list[Row]) -> list[str]:
     return [f"{n},{us:.2f},{d}" for n, us, d in rows]
 
 
+def parse_derived(derived: str) -> dict[str, str]:
+    """Parse a ``k=v;k=v`` derived field back into a dict (the inverse of
+    what the figure drivers and serve stats emit); junk fragments without
+    '=' are dropped."""
+    return dict(kv.split("=", 1) for kv in derived.split(";") if "=" in kv)
+
+
 def record_rows(tag, records, derive) -> list[Row]:
     """Format suite records as figure rows, surfacing error records.
 

@@ -1,10 +1,19 @@
 """§V-B HyperQ analogue: concurrent Pathfinder instances.
 
 The paper launches N Pathfinder kernels on N streams and sees speedup
-saturate near the 32 hardware work queues. The TPU analogue fills idle
-vector lanes by *batching* N instances into one program
-(`core.features.concurrent_instances`); speedup = N·t(1) / t(N) — >1 means
-one instance underutilizes the machine, the paper's exact finding.
+saturate near the 32 hardware work queues. Both halves of the analogue now
+route through the serving subsystem's dispatch modes (``repro.serve``):
+
+- **loop** (``serve.lanes.serve_loop``): N jitted calls synchronized one
+  by one — the no-concurrency baseline;
+- **batched** (``serve.lanes.batched_call``): N instances fused into one
+  program, filling idle vector lanes the way HyperQ fills idle work
+  queues; speedup = loop_us / batched_us — >1 means one instance
+  underutilizes the machine, the paper's exact finding.
+
+The lane-count sweep (the *dispatch* half of the story) lives in
+``benchmarks/fig_concurrency.py``; this section keeps the paper-shaped
+instances-vs-batching table and its historical Row shape.
 """
 
 from __future__ import annotations
@@ -12,9 +21,11 @@ from __future__ import annotations
 import jax
 
 from benchmarks.common import Row
-from repro.core.features import concurrent_instances
 from repro.core.harness import time_fn
 from repro.bench.level1.pathfinder import pathfinder_min_path
+from repro.serve.lanes import batched_call, serve_loop
+from repro.serve.latency import stats_from_completions
+from repro.serve.loadgen import closed_loop_schedule
 
 
 def rows(rows_grid: int = 64, cols: int = 256) -> list[Row]:
@@ -29,12 +40,24 @@ def rows(rows_grid: int = 64, cols: int = 256) -> list[Row]:
     single = jax.jit(pathfinder_min_path)
     for n in (1, 2, 4, 8, 16, 32):
         grids = jax.random.randint(key, (n, rows_grid, cols), 0, 10)
+        jax.block_until_ready(single(grids[0]))  # compile outside timing
 
-        def loop(grids=grids, n=n):
-            return [single(grids[i]) for i in range(n)]
+        # (a) loop dispatch: one instance per request, synchronized each
+        # time; 2n warmup requests then 5 measured sweeps of n instances.
+        state = {"i": 0}
 
-        us_loop, _ = time_fn(lambda: loop(), (), iters=5, warmup=2)
-        fn = jax.jit(concurrent_instances(pathfinder_min_path, n))
+        def call() -> jax.Array:
+            i = state["i"] = (state["i"] + 1) % n
+            return single(grids[i])
+
+        completions = serve_loop(
+            call, closed_loop_schedule(7 * n, warmup=2 * n)
+        )
+        stats = stats_from_completions(completions)
+        us_loop = n * 1e6 / stats.achieved_qps  # per N-instance sweep
+
+        # (b) batched dispatch: the same N instances as one program.
+        fn = jax.jit(batched_call(pathfinder_min_path, n))
         us_batch, _ = time_fn(fn, (grids,), iters=5, warmup=2)
         out.append(
             (

@@ -1,0 +1,200 @@
+"""Concurrency figure: dispatch-lane speedup and co-location interference.
+
+The §V-B HyperQ study, generalized suite-wide through the serving
+subsystem (``repro.serve``): any registered workload is served closed-loop
+at each lane count in the sweep, and the dispatch speedup is its achieved
+QPS over the single-lane serial baseline (lanes=1, concurrency=1 — one
+request in flight, the no-concurrency floor). The paper's curve saturates
+near the 32 hardware work queues; here saturation lands wherever host
+dispatch stops hiding behind device execution.
+
+The co-location half serves a workload pair through split lanes
+(``ServeSpec.colocate``) and reports both tenants' p50 slowdown vs their
+isolated baselines — the §V-B kernel co-location experiment as a table.
+
+As a section (``benchmarks/run.py --sections fig_concurrency``) it emits
+the standard CSV rows; as a script it renders the two tables. Everything
+routes through ``run_suite`` and the shared engine, so serving reuses the
+executables the measure stage compiled.
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+
+if __package__ in (None, ""):  # `python benchmarks/fig_concurrency.py`
+    sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from benchmarks.common import Row, parse_derived, record_rows
+from repro.core import run_suite
+from repro.core.plan import ServeSpec
+
+DEFAULT_LANES = (1, 2, 4, 8, 16, 32)
+# One wavefront DP kernel (the paper's HyperQ subject) and one MXU kernel,
+# so the dispatch curve and the interference pair cover both regimes.
+DEFAULT_NAMES = ("pathfinder", "gemm_f32_nn")
+FAST = dict(iters=1, warmup=0, include_backward=False, verbose=False)
+
+
+def _serve_rows(tag: str, records, extra) -> list[Row]:
+    return record_rows(
+        tag,
+        records,
+        lambda r: (
+            f"{extra(r)}p50_us={r.latency_p50_us:.1f};"
+            f"p99_us={r.latency_p99_us:.1f};qps={r.achieved_qps:.1f}"
+        ),
+    )
+
+
+def lane_sweep_rows(
+    preset: int = 0,
+    names=DEFAULT_NAMES,
+    lanes_sweep=DEFAULT_LANES,
+    duration_s: float = 0.3,
+) -> list[Row]:
+    """One row per (workload, lane count): achieved QPS plus the dispatch
+    speedup over the same workload's narrowest-lane baseline (lanes=1 when
+    the sweep includes it — one request in flight, the serial floor)."""
+    out: list[Row] = []
+    base_qps: dict[str, float] = {}
+    # Ascending order puts the baseline first, so every later row can
+    # carry a speedup no matter what subset the caller swept.
+    sweep = sorted(set(lanes_sweep))
+    for n in sweep:
+        # lanes=1 runs one request at a time (the serial-dispatch floor);
+        # wider sweeps keep 2 in-flight requests per lane, the paper's
+        # N-kernels-on-N-queues shape.
+        concurrency = 1 if n == 1 else 2 * n
+        serve = ServeSpec(
+            mode="closed", concurrency=concurrency, lanes=n,
+            duration_s=duration_s,
+        )
+        records = run_suite(names=list(names), preset=preset, serve=serve, **FAST)
+        for r in records:
+            if r.status == "ok" and r.achieved_qps:
+                base_qps.setdefault(r.name, r.achieved_qps)
+
+        def extra(r, n=n, concurrency=concurrency):
+            base = base_qps.get(r.name)
+            speedup = (
+                f"{r.achieved_qps / base:.2f}" if base and r.achieved_qps else "-"
+            )
+            return (
+                f"lanes={n};concurrency={concurrency};"
+                f"dispatch_speedup={speedup};"
+            )
+
+        out.extend(
+            (f"{name}.l{n}", us, derived)
+            for name, us, derived in _serve_rows("fig_concurrency", records, extra)
+        )
+    return out
+
+
+def colocation_rows(
+    preset: int = 0,
+    names=DEFAULT_NAMES,
+    duration_s: float = 0.3,
+    lanes: int = 2,
+    concurrency: int = 4,
+) -> list[Row]:
+    """Both tenants' slowdown-vs-isolated for each adjacent pair in
+    ``names`` (the interference matrix's off-diagonal samples)."""
+    out: list[Row] = []
+    pairs = [(names[i], names[i + 1]) for i in range(len(names) - 1)]
+    for a, b in pairs:
+        serve = ServeSpec(
+            mode="closed",
+            concurrency=concurrency,
+            lanes=lanes,
+            duration_s=duration_s,
+            colocate=b,
+        )
+        records = run_suite(names=[a], preset=preset, serve=serve, **FAST)
+        out.extend(
+            _serve_rows(
+                "fig_concurrency.colocate",
+                records,
+                lambda r: (
+                    f"pair={a}+{b};slowdown="
+                    + (
+                        f"{r.slowdown_vs_isolated:.2f};"
+                        if r.slowdown_vs_isolated is not None
+                        else "-;"
+                    )
+                ),
+            )
+        )
+    return out
+
+
+def rows(preset: int = 0) -> list[Row]:
+    return lane_sweep_rows(preset=preset) + colocation_rows(preset=preset)
+
+
+def main() -> int:
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--preset", type=int, default=0)
+    ap.add_argument("--names", nargs="*", default=list(DEFAULT_NAMES))
+    ap.add_argument("--lanes", type=int, nargs="*", default=list(DEFAULT_LANES))
+    ap.add_argument("--duration", type=float, default=0.3)
+    args = ap.parse_args()
+
+    sweep = lane_sweep_rows(
+        preset=args.preset,
+        names=tuple(args.names),
+        lanes_sweep=tuple(args.lanes),
+        duration_s=args.duration,
+    )
+    ok = [row for row in sweep if "qps=" in row[2]]
+    if not ok:
+        print(
+            f"fig_concurrency: no ok serve records out of {len(sweep)} rows; "
+            "see stderr for per-benchmark errors",
+            file=sys.stderr,
+        )
+        return 1
+
+    # Pivot: benchmark x lane count -> (qps, speedup).
+    table: dict[str, dict[int, tuple[float, str]]] = {}
+    counts: list[int] = []
+    for name, _us, derived in ok:
+        fields = parse_derived(derived)
+        n = int(fields["lanes"])
+        if n not in counts:
+            counts.append(n)
+        bench = name.removeprefix("fig_concurrency.").rsplit(".l", 1)[0]
+        table.setdefault(bench, {})[n] = (
+            float(fields["qps"]), fields["dispatch_speedup"]
+        )
+    print(f"{'benchmark':<28}" + "".join(
+        f"{f'{n}-lane qps':>14}{'speedup':>10}" for n in counts
+    ))
+    for bench, per in table.items():
+        line = f"{bench:<28}"
+        for n in counts:
+            qps, speedup = per.get(n, (0.0, "-"))
+            line += f"{qps:>14.1f}{speedup:>10}"
+        print(line)
+
+    print()
+    print(f"{'pair (tenant row)':<44}{'p50_us':>10}{'qps':>10}{'slowdown':>10}")
+    for name, us, derived in colocation_rows(
+        preset=args.preset, names=tuple(args.names), duration_s=args.duration
+    ):
+        fields = parse_derived(derived)
+        label = name.removeprefix("fig_concurrency.colocate.")
+        print(
+            f"{fields.get('pair', '?') + ' / ' + label:<44}"
+            f"{us:>10.1f}{float(fields.get('qps', 0)):>10.1f}"
+            f"{fields.get('slowdown', '-'):>10}"
+        )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

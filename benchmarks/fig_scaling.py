@@ -24,7 +24,7 @@ import sys
 if __package__ in (None, ""):  # `python benchmarks/fig_scaling.py`
     sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
-from benchmarks.common import Row, record_rows
+from benchmarks.common import Row, parse_derived, record_rows
 from repro.core import run_suite
 
 # A cross-section of batchable workloads: MXU (gemm/connected), VPU
@@ -47,6 +47,12 @@ def _usable_counts(counts) -> tuple[int, ...]:
     avail = jax.device_count()
     usable = tuple(c for c in counts if c <= avail)
     return usable or (1,)
+
+
+class ScalingFigureError(ValueError):
+    """A sweep that cannot produce the figure (no usable device counts, or
+    zero ok records). main() prints the one-line message and exits nonzero
+    instead of dumping a traceback or rendering an empty table."""
 
 
 def rows(
@@ -90,16 +96,35 @@ def main() -> int:
                     choices=("replicate", "shard"))
     args = ap.parse_args()
 
-    out = rows(
-        preset=args.preset, counts=tuple(args.counts),
-        names=tuple(args.names), placement=args.placement,
-    )
+    try:
+        if not args.counts:
+            raise ScalingFigureError("fig_scaling: empty --counts sweep")
+        import jax
+
+        if max(args.counts) > 1 and _usable_counts(args.counts) == (1,) and 1 not in args.counts:
+            raise ScalingFigureError(
+                f"fig_scaling: no requested device count in {args.counts} fits "
+                f"this host ({jax.device_count()} devices); force more with "
+                "XLA_FLAGS=--xla_force_host_platform_device_count=8"
+            )
+        out = rows(
+            preset=args.preset, counts=tuple(args.counts),
+            names=tuple(args.names), placement=args.placement,
+        )
+    except ScalingFigureError as e:
+        print(str(e), file=sys.stderr)
+        return 2
+    except ValueError as e:  # bad selection etc. — configuration, not a crash
+        print(f"fig_scaling: {e}", file=sys.stderr)
+        return 2
     # Pivot rows into a per-benchmark scaling table.
     table: dict[str, dict[int, tuple[float, str]]] = {}
     counts: list[int] = []
+    errors = 0
     for name, us, derived in out:
-        fields = dict(kv.split("=", 1) for kv in derived.split(";") if "=" in kv)
+        fields = parse_derived(derived)
         if "devices" not in fields:
+            errors += 1
             print(f"# {name}: {derived}", file=sys.stderr)
             continue
         n = int(fields["devices"])
@@ -107,6 +132,13 @@ def main() -> int:
             counts.append(n)
         bench = name.removeprefix("fig_scaling.")
         table.setdefault(bench, {})[n] = (us, fields.get("eff", "-"))
+    if not table:
+        print(
+            f"fig_scaling: zero ok records in the sweep "
+            f"({errors} error rows, see above) — nothing to tabulate",
+            file=sys.stderr,
+        )
+        return 1
     header = f"{'benchmark':<28}" + "".join(
         f"{f'{n}dev us':>12}{'eff':>10}" for n in counts
     )

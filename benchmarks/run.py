@@ -6,6 +6,7 @@ Prints ``name,us_per_call,derived`` CSV. Sections:
   fig3/4   — DNN forward/backward utilization
   fig5     — application-tier utilization (Fig. 5)
   fig_scaling — device-scaling sweep (sharded data-parallel placement)
+  fig_concurrency — dispatch-lane speedup + co-location interference
   table2   — per-layer kernel classification (Table II)
   feat_*   — §V-B modern-feature studies (HyperQ / UM / CG / DP analogues)
   roofline — §Roofline table from the multi-pod dry-run artifacts
@@ -34,6 +35,7 @@ SECTION_NAMES = (
     "fig4",
     "fig5",
     "fig_scaling",
+    "fig_concurrency",
     "table2",
     "feat_hyperq",
     "feat_unified_memory",
@@ -67,6 +69,7 @@ def main(argv=None) -> int:
         fig4_dnn_backward,
         fig5_suite_utilization,
         fig12_legacy_utilization,
+        fig_concurrency,
         fig_scaling,
         roofline_table,
         table1_suite,
@@ -80,6 +83,7 @@ def main(argv=None) -> int:
         "fig4": lambda: fig4_dnn_backward.rows(preset=args.preset),
         "fig5": lambda: fig5_suite_utilization.rows(preset=args.preset),
         "fig_scaling": lambda: fig_scaling.rows(preset=args.preset),
+        "fig_concurrency": lambda: fig_concurrency.rows(preset=args.preset),
         "table2": lambda: table2_dnn_kernels.rows(preset=max(args.preset, 1)),
         "feat_hyperq": feat_hyperq.rows,
         "feat_unified_memory": feat_unified_memory.rows,

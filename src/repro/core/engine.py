@@ -20,9 +20,19 @@ declarative half). For every selected benchmark the engine runs the stages:
   executable (``harness.time_fn``).
 - **characterize**: static cost/memory/roofline analysis of the cached
   executable, computed once and memoized alongside it.
+- **serve** (only when the plan carries a
+  :class:`~repro.core.plan.ServeSpec`): run the *same cached executable*
+  under generated load through ``repro.serve`` — open-loop arrivals at a
+  target QPS or closed-loop at fixed concurrency, dispatched across N
+  lanes — and fold latency percentiles / achieved QPS into the record.
+  With ``colocate``, the workload is additionally served against a
+  partner benchmark on split lanes and both rows carry their p50
+  slowdown vs the isolated baseline. Serving never compiles anything the
+  measure stage didn't already put in the cache (the partner's own entry
+  aside), and a sharded plan serves the sharded lowering.
 - **report**: a :class:`BenchmarkRecord` carrying ``devices`` /
-  ``placement`` / ``scaling_efficiency``, streamed to the JSONL writer as
-  it is produced.
+  ``placement`` / ``scaling_efficiency`` (plus the serve columns above),
+  streamed to the JSONL writer as it is produced.
 
 ``run()`` iterates ``plan.device_sweep`` (ascending), re-running the
 selection at each device count against the shared cache; multi-device rows
@@ -51,8 +61,9 @@ from repro.core.harness import (
     time_fn,
     timing_from_stats,
 )
-from repro.core.plan import ExecutionPlan, Placement, PlanError
-from repro.core.registry import BenchmarkSpec, Workload
+from repro.core.hlocache import HloDiskCache
+from repro.core.plan import ExecutionPlan, Placement, PlanError, ServeSpec
+from repro.core.registry import BenchmarkSpec, Workload, get_benchmark
 from repro.core.results import (
     BenchmarkRecord,
     JsonlReportWriter,
@@ -135,8 +146,16 @@ class Engine:
     across runs, sections, and figure drivers within one process.
     """
 
-    def __init__(self, cache: CompileCache | None = None) -> None:
+    def __init__(
+        self,
+        cache: CompileCache | None = None,
+        cache_dir: str | None = None,
+    ) -> None:
         self.cache = cache if cache is not None else CompileCache()
+        # Optional cross-process persistence of lowered HLO text (ROADMAP
+        # open item, scoped to lowering text): warm entries skip retracing
+        # by compiling the stored text directly. None = in-process only.
+        self.disk_cache = HloDiskCache(cache_dir) if cache_dir else None
 
     # -- stages ------------------------------------------------------------
 
@@ -220,7 +239,22 @@ class Engine:
                     executable=fn,
                     info=empty_compiled_info(_pass_name(workload, backward)),
                 )
-            return _CacheEntry(executable=jax.jit(fn).lower(*args).compile())
+            # Disk cache (single-device entries only: multi-device lowerings
+            # embed placement-dependent shardings): a warm entry skips the
+            # retrace, a cold or failed one falls through to it.
+            use_disk = self.disk_cache is not None and placement.devices == 1
+            if use_disk:
+                loaded = self.disk_cache.load(key, args)
+                if loaded is not None:
+                    executable, info = loaded
+                    return _CacheEntry(executable=executable, info=info)
+            lowered = jax.jit(fn).lower(*args)
+            compiled = lowered.compile()
+            if use_disk:
+                self.disk_cache.store(
+                    key, lowered, compiled, _pass_name(workload, backward)
+                )
+            return _CacheEntry(executable=compiled)
 
         return self.cache.lookup(key, build)
 
@@ -250,6 +284,102 @@ class Engine:
                 entry.executable, _pass_name(workload, backward)
             )
         return entry.info
+
+    # -- serving -----------------------------------------------------------
+
+    def _serve_call(self, call, serve: ServeSpec, seed: int):
+        """One isolated serving run of an already-compiled callable."""
+        from repro.serve.lanes import run_closed_loop, run_open_loop
+        from repro.serve.latency import stats_from_completions
+        from repro.serve.loadgen import open_loop_schedule
+
+        # Fill the whole pipeline (every in-flight slot, not just one per
+        # lane) before measuring, like time_fn's warmup: early requests
+        # submitted into an empty window see less queueing than steady
+        # state and would bias the percentiles low.
+        warmup = max(serve.concurrency, serve.lanes, 2)
+        if serve.mode == "open":
+            schedule = open_loop_schedule(
+                qps=serve.qps,
+                duration_s=serve.duration_s,
+                seed=seed,
+                warmup=warmup,
+            )
+            completions = run_open_loop(
+                call, schedule, n_lanes=serve.lanes, concurrency=serve.concurrency
+            )
+            return stats_from_completions(completions, offered_qps=serve.qps)
+        completions = run_closed_loop(
+            call,
+            concurrency=serve.concurrency,
+            n_lanes=serve.lanes,
+            duration_s=serve.duration_s,
+            warmup=warmup,
+        )
+        return stats_from_completions(completions)
+
+    def _stage_serve(
+        self,
+        spec: BenchmarkSpec,
+        entry: _CacheEntry,
+        args: tuple,
+        plan: ExecutionPlan,
+        placement: Placement,
+    ) -> tuple[Any, str | None, float | None, list[BenchmarkRecord]]:
+        """Serve the measured executable under the plan's ServeSpec.
+
+        Returns ``(stats, colocate, slowdown, partner_records)``. Without
+        co-location this reuses the cache entry the measure stage compiled
+        — zero new compilations. With ``colocate``, the partner benchmark
+        is built/placed/compiled through the same cache and both tenants
+        are served isolated then together (``serve.interference``); the
+        partner's colocated row is returned for the report.
+        """
+        serve = plan.serve
+        call = lambda: entry.executable(*args)  # noqa: E731
+        if serve.colocate is None:
+            return self._serve_call(call, serve, plan.seed), None, None, []
+
+        from repro.serve.interference import measure_colocation
+
+        partner_spec = get_benchmark(serve.colocate)
+        p_preset = plan.resolve_preset(partner_spec)
+        p_workload, p_args = self._stage_build(partner_spec, plan, p_preset)
+        p_args, p_placement = self._stage_place(
+            p_workload, p_args, plan.placement_at(placement.devices)
+        )
+        p_entry = self._stage_compile(
+            partner_spec, p_workload, p_args, plan, p_preset, False, p_placement
+        )
+        p_call = lambda: p_entry.executable(*p_args)  # noqa: E731
+
+        a_name = spec.name
+        b_name = serve.colocate if serve.colocate != spec.name else spec.name + "#2"
+        result = measure_colocation(
+            {a_name: call, b_name: p_call},
+            concurrency=serve.concurrency,
+            n_lanes=serve.lanes,
+            duration_s=serve.duration_s,
+            warmup=max(serve.concurrency, serve.lanes, 2),
+        )
+        partner = BenchmarkRecord.from_serve(
+            partner_spec,
+            p_preset,
+            result.colocated[b_name],
+            mode=serve.mode,
+            lanes=serve.lanes,
+            name=f"{b_name}@{a_name}",
+            colocate=a_name,
+            slowdown=result.slowdown(b_name),
+            devices=p_placement.devices,
+            placement=p_placement.mode,
+        )
+        return (
+            result.colocated[a_name],
+            b_name,
+            result.slowdown(a_name),
+            [partner],
+        )
 
     def characterize(
         self,
@@ -316,11 +446,17 @@ class Engine:
                 f"plan requests {want} devices but only "
                 f"{available} available"
             )
+        if plan.serve is not None and plan.serve.colocate is not None:
+            try:
+                get_benchmark(plan.serve.colocate)
+            except KeyError as e:
+                raise PlanError(str(e)) from None
         metadata = RunMetadata.capture(
             preset=plan.preset,
             devices=plan.devices,
             placement=plan.placement.mode,
             device_sweep=plan.device_sweep,
+            serve=plan.serve,
         )
         writer = JsonlReportWriter(jsonl_path, metadata) if jsonl_path else None
         records: list[BenchmarkRecord] = []
@@ -396,7 +532,7 @@ class Engine:
             ]
         out: list[BenchmarkRecord] = []
         for backward in plan.passes(workload):
-            out.append(
+            out.extend(
                 self._run_pass(
                     spec, workload, args, plan, preset, backward, placement
                 )
@@ -412,7 +548,7 @@ class Engine:
         preset: int,
         backward: bool,
         placement: Placement,
-    ) -> BenchmarkRecord:
+    ) -> list[BenchmarkRecord]:
         stage = "compile"
         try:
             entry = self._stage_compile(
@@ -422,15 +558,33 @@ class Engine:
             timing = self._stage_measure(workload, entry, args, plan, backward)
             stage = "characterize"
             info = self._stage_characterize(workload, entry, backward)
-            return BenchmarkRecord.from_measurement(
+            rec = BenchmarkRecord.from_measurement(
                 spec, preset, timing, info,
                 devices=placement.devices, placement=placement.mode,
             )
+            extra: list[BenchmarkRecord] = []
+            # Serving measures request-level concurrency of the forward
+            # pass; backward rows keep their isolation-mode semantics.
+            if plan.serve is not None and not backward:
+                stage = "serve"
+                stats, colocate, slowdown, extra = self._stage_serve(
+                    spec, entry, args, plan, placement
+                )
+                rec.apply_serve(
+                    stats,
+                    mode=plan.serve.mode,
+                    lanes=plan.serve.lanes,
+                    colocate=colocate,
+                    slowdown=slowdown,
+                )
+            return [rec] + extra
         except Exception as e:  # noqa: BLE001 — fault isolation is the contract
-            return BenchmarkRecord.from_error(
-                spec, preset, stage=stage, error=_err_text(e), backward=backward,
-                devices=placement.devices, placement=placement.mode,
-            )
+            return [
+                BenchmarkRecord.from_error(
+                    spec, preset, stage=stage, error=_err_text(e), backward=backward,
+                    devices=placement.devices, placement=placement.mode,
+                )
+            ]
 
 
 def _pass_name(workload: Workload, backward: bool) -> str:

@@ -1,0 +1,198 @@
+"""Cross-process persistence of lowered HLO text (the ROADMAP open item,
+scoped to lowering text — *not* serialized executables).
+
+The in-process :class:`~repro.core.engine.CompileCache` dies with the
+process, so every CI suite run re-traces and re-lowers every workload.
+This cache persists, per compile-cache key, exactly what the lowering
+produced: the StableHLO module text plus the static characterization
+(cost / memory / collective bytes) computed from the compiled artifact.
+A warm run skips Python retracing entirely — the stored text is handed
+straight to the backend compiler (``client.compile``), and the stored
+characterization rebuilds :class:`~repro.core.harness.CompiledInfo`
+without touching the executable.
+
+Entries are versioned by ``jax.__version__``, backend, and a content hash
+of the ``repro`` package source (a new toolchain *or an edited kernel*
+gets a fresh directory rather than stale lowerings), keyed by a hash of
+the engine's compile-cache key, and scoped to **single-device** entries:
+multi-device lowerings embed placement-dependent shardings and always
+retrace.
+
+Every warm load is validated by one trial execution; *any* failure —
+corrupt file, toolchain drift, call-convention mismatch — silently falls
+back to the normal trace-and-compile path. The cache can only ever make a
+run faster, never wronger.
+
+Caveat: warm entries execute through the backend client's raw
+call convention rather than ``jax.jit``'s dispatch path, which adds a few
+hundred microseconds of host overhead per call. This cache is a CI /
+repeat-run accelerator (where wall-clock is dominated by tracing and
+compilation); runs whose *measured microseconds* are the artifact should
+stay cold.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.harness import CompiledInfo
+from repro.core.metrics import roofline_terms
+
+__all__ = ["HloDiskCache"]
+
+_FORMAT_VERSION = 1
+
+
+def _flat_out_structure(out_info: Any) -> tuple[int, bool] | None:
+    """(n_outputs, is_single_leaf) when the output pytree is a leaf or a
+    flat tuple/list of leaves; None for nested structures (not cached —
+    the raw executable returns a flat list we could not fold back)."""
+    leaves, treedef = jax.tree_util.tree_flatten(out_info)
+    if not leaves:
+        return None
+    if len(leaves) == 1 and treedef == jax.tree_util.tree_structure(leaves[0]):
+        return 1, True
+    if treedef == jax.tree_util.tree_structure(tuple(leaves)):
+        return len(leaves), False
+    if treedef == jax.tree_util.tree_structure(list(leaves)):
+        return len(leaves), False
+    return None
+
+
+def _source_digest() -> str:
+    """Content hash of every .py file in the repro package: the compile-
+    cache key says *which* workload, this says *which code* — an edited
+    kernel must miss, not silently replay its old lowering."""
+    import repro
+
+    pkg_root = os.path.dirname(os.path.abspath(repro.__file__))
+    h = hashlib.sha256()
+    for dirpath, dirnames, filenames in sorted(os.walk(pkg_root)):
+        dirnames.sort()
+        for fname in sorted(filenames):
+            if not fname.endswith(".py"):
+                continue
+            path = os.path.join(dirpath, fname)
+            h.update(os.path.relpath(path, pkg_root).encode())
+            with open(path, "rb") as f:
+                h.update(f.read())
+    return h.hexdigest()[:12]
+
+
+class HloDiskCache:
+    """Persist lowered HLO text + static characterization per cache key."""
+
+    def __init__(self, root: str) -> None:
+        backend = jax.default_backend()
+        self.root = os.path.join(
+            root, f"jax-{jax.__version__}-{backend}-{_source_digest()}"
+        )
+        os.makedirs(self.root, exist_ok=True)
+        self.hits = 0  # warm loads that produced a working executable
+        self.misses = 0  # lookups that fell back to tracing
+        self.stores = 0
+
+    def _path(self, key: tuple) -> str:
+        digest = hashlib.sha256(repr(key).encode()).hexdigest()[:24]
+        return os.path.join(self.root, f"{digest}.json")
+
+    # -- store -------------------------------------------------------------
+
+    def store(self, key: tuple, lowered: Any, compiled: Any, name: str) -> None:
+        """Persist one lowering. Best-effort: outputs that are not a flat
+        tuple of arrays, or analyses this backend does not expose, simply
+        skip the store — a miss next run, never an error this run."""
+        try:
+            out = _flat_out_structure(lowered.out_info)
+            if out is None:
+                return
+            n_outputs, single = out
+            from repro.core.metrics import (
+                collective_bytes_from_hlo,
+                cost_analysis_dict,
+            )
+            from repro.core.harness import _memory_analysis_dict
+
+            text = lowered.as_text()
+            payload = {
+                "format": _FORMAT_VERSION,
+                "name": name,
+                "hlo": text,
+                "n_outputs": n_outputs,
+                "single": single,
+                "cost": cost_analysis_dict(compiled),
+                "memory": _memory_analysis_dict(compiled),
+                "collective_bytes": collective_bytes_from_hlo(compiled.as_text()),
+            }
+            path = self._path(key)
+            tmp = path + ".tmp"
+            with open(tmp, "w") as f:
+                json.dump(payload, f)
+            os.replace(tmp, path)
+            self.stores += 1
+        except Exception:  # noqa: BLE001 — persistence is advisory
+            return
+
+    # -- load --------------------------------------------------------------
+
+    def load(
+        self, key: tuple, args: tuple
+    ) -> tuple[Callable[..., Any], CompiledInfo] | None:
+        """Compile the stored HLO text directly (no retrace) and rebuild the
+        memoized characterization. One trial execution validates the
+        call convention; any failure returns None (caller retraces)."""
+        path = self._path(key)
+        try:
+            with open(path) as f:
+                payload = json.load(f)
+            if payload.get("format") != _FORMAT_VERSION:
+                raise ValueError("stale cache format")
+            executable = _compile_text(
+                payload["hlo"], int(payload["n_outputs"]), bool(payload["single"])
+            )
+            jax.block_until_ready(executable(*args))  # trial call
+            info = CompiledInfo(
+                name=payload["name"],
+                cost=dict(payload["cost"]),
+                memory=dict(payload["memory"]),
+                roofline=roofline_terms(
+                    dict(payload["cost"]),
+                    collective_bytes=float(payload["collective_bytes"]),
+                ),
+                hlo_collectives_bytes=float(payload["collective_bytes"]),
+            )
+        except Exception:  # noqa: BLE001 — any problem means "retrace"
+            self.misses += 1
+            return None
+        self.hits += 1
+        return executable, info
+
+
+def _compile_text(
+    text: str, n_outputs: int, single: bool
+) -> Callable[..., Any]:
+    from jax.extend import backend as jex_backend
+
+    exe = jex_backend.get_backend().compile(text)
+
+    def call(*args: Any) -> Any:
+        flat = [
+            a if isinstance(a, jax.Array) else jnp.asarray(a)
+            for a in jax.tree_util.tree_leaves(args)
+        ]
+        outs = exe.execute(flat)
+        if len(outs) != n_outputs:
+            raise RuntimeError(
+                f"cached executable returned {len(outs)} outputs, "
+                f"expected {n_outputs}"
+            )
+        return outs[0] if single else tuple(outs)
+
+    return call

@@ -4,10 +4,13 @@ An :class:`ExecutionPlan` is a frozen value object describing *what* to run
 (selection by level / name / tag / domain, or an explicit spec list), *at
 what size* (SHOC-style preset plus Rodinia-style per-benchmark overrides),
 *which passes* (forward, and backward where a workload defines one), *how to
-measure* (iters / warmup / seed), and *where* (a :class:`Placement` —
+measure* (iters / warmup / seed), *where* (a :class:`Placement` —
 device count plus mode, ``replicate`` or ``shard``, realized through
 ``runtime/sharding`` helpers; ``device_sweep`` runs the same selection at
-several device counts for scaling curves).
+several device counts for scaling curves), and *under what load* (an
+optional :class:`ServeSpec` — open/closed-loop serving through N dispatch
+lanes, with optional co-location; realized by the engine's serve stage
+via ``repro.serve``).
 
 Plans carry no execution state: the engine (``core/engine.py``) consumes a
 plan, owns the compilation cache and the stage sequence, and emits records.
@@ -22,9 +25,17 @@ from typing import Any, Mapping, Sequence
 
 from repro.core.registry import BenchmarkSpec, Workload, all_benchmarks
 
-__all__ = ["ExecutionPlan", "Placement", "PlanError", "PLACEMENT_MODES"]
+__all__ = [
+    "ExecutionPlan",
+    "Placement",
+    "ServeSpec",
+    "PlanError",
+    "PLACEMENT_MODES",
+    "SERVE_MODES",
+]
 
 PLACEMENT_MODES = ("replicate", "shard")
+SERVE_MODES = ("open", "closed")
 
 
 class PlanError(ValueError):
@@ -58,6 +69,54 @@ class Placement:
         if self.mode not in PLACEMENT_MODES:
             raise PlanError(
                 f"placement mode must be one of {PLACEMENT_MODES}, got {self.mode!r}"
+            )
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeSpec:
+    """How to serve the selected workloads under load (``repro.serve``).
+
+    - ``mode="closed"``: keep ``concurrency`` requests in flight across
+      ``lanes`` dispatch lanes for ``duration_s`` seconds (throughput-
+      oriented; the next request is issued the moment a slot frees).
+    - ``mode="open"``: Poisson arrivals at ``qps`` for ``duration_s``
+      seconds, deterministic for the plan's seed; ``concurrency`` caps
+      total in-flight work under overload.
+    - ``colocate``: serve every selected workload *paired* with this
+      registered benchmark, splitting the lanes between the two tenants,
+      and record each tenant's slowdown vs its isolated baseline. A
+      closed-loop measurement (open arrivals would conflate queueing with
+      interference), so it requires ``mode="closed"``.
+
+    The engine runs serving as a stage after ``measure``, calling the
+    *same cached executable* the timer used — a serve run never recompiles
+    (and a sharded plan serves the sharded lowering).
+    """
+
+    mode: str = "closed"
+    qps: float = 0.0
+    concurrency: int = 4
+    lanes: int = 2
+    duration_s: float = 2.0
+    colocate: str | None = None
+
+    def __post_init__(self) -> None:
+        if self.mode not in SERVE_MODES:
+            raise PlanError(
+                f"serve mode must be one of {SERVE_MODES}, got {self.mode!r}"
+            )
+        if self.mode == "open" and self.qps <= 0:
+            raise PlanError(f"open-loop serving needs qps > 0, got {self.qps}")
+        if self.concurrency < 1:
+            raise PlanError(f"serve concurrency must be >= 1, got {self.concurrency}")
+        if self.lanes < 1:
+            raise PlanError(f"serve lanes must be >= 1, got {self.lanes}")
+        if self.duration_s <= 0:
+            raise PlanError(f"serve duration_s must be > 0, got {self.duration_s}")
+        if self.colocate is not None and self.mode != "closed":
+            raise PlanError(
+                "co-location is a closed-loop measurement; "
+                f"got colocate={self.colocate!r} with mode={self.mode!r}"
             )
 
 
@@ -120,6 +179,10 @@ class ExecutionPlan:
     # ascending, deduplicated) under placement.mode, sharing the compile
     # cache across counts. None = just (placement.devices,).
     device_sweep: tuple[int, ...] | None = None
+    # Serve the selection under generated load after measuring it: a frozen
+    # ServeSpec (mode/qps/concurrency/lanes/duration/colocate), or None for
+    # isolation-only runs (the pre-serve behaviour).
+    serve: ServeSpec | None = None
     # Escape hatch for tests and programmatic callers: bypass the registry
     # and run exactly these specs (selection filters are ignored).
     specs: tuple[BenchmarkSpec, ...] | None = None
@@ -138,6 +201,8 @@ class ExecutionPlan:
             raise ValueError(f"iters must be >= 1, got {self.iters}")
         if self.warmup < 0:
             raise ValueError(f"warmup must be >= 0, got {self.warmup}")
+        if self.serve is not None and not isinstance(self.serve, ServeSpec):
+            raise PlanError(f"serve must be a ServeSpec, got {self.serve!r}")
         self._resolve_placement()
 
     def _resolve_placement(self) -> None:

@@ -12,7 +12,9 @@ Two report formats share one record schema:
 ``load_records`` sniffs the format and reads either; ``load_run`` also
 returns the :class:`RunMetadata` when the file carries it. Error rows
 (per-benchmark fault isolation in the engine) are ordinary records with
-``status="error"`` so both formats round-trip them unchanged.
+``status="error"`` so both formats round-trip them unchanged. A missing,
+empty, or unparseable report raises :class:`ReportError` — a one-line
+configuration-style error CLI drivers print without a traceback.
 """
 
 from __future__ import annotations
@@ -24,12 +26,14 @@ from typing import IO, Iterable, Sequence
 
 from repro.core.harness import CompiledInfo, TimingResult
 from repro.core.metrics import utilization_scale10
+from repro.core.plan import ServeSpec
 
 __all__ = [
     "SCHEMA_VERSION",
     "BenchmarkRecord",
     "RunMetadata",
     "JsonlReportWriter",
+    "ReportError",
     "to_csv_lines",
     "write_report",
     "load_records",
@@ -38,7 +42,15 @@ __all__ = [
 
 # Bump when BenchmarkRecord/RunMetadata fields change incompatibly.
 # v2: placement-aware rows — devices / placement / scaling_efficiency.
-SCHEMA_VERSION = 2
+# v3: serving rows — latency percentiles / achieved QPS / goodput /
+#     co-location slowdown; RunMetadata carries the ServeSpec.
+SCHEMA_VERSION = 3
+
+
+class ReportError(ValueError):
+    """A report that cannot be read as asked (missing file, empty file,
+    no usable records). CLIs print the one-line message and exit nonzero
+    instead of dumping a traceback."""
 
 
 @dataclasses.dataclass
@@ -53,6 +65,12 @@ class BenchmarkRecord:
     ``replicate``); ``scaling_efficiency`` is speedup over the same run's
     1-device row divided by the device count (None when no baseline row
     exists, e.g. single-count runs or a failed baseline).
+
+    The ``serve_*`` / ``latency_*`` / ``*_qps`` columns are populated only
+    when the plan carried a :class:`~repro.core.plan.ServeSpec` (schema
+    v3): latency percentiles over non-warmup requests, achieved QPS, and —
+    for co-located runs — the partner's name and this row's p50 slowdown
+    vs its isolated baseline.
     """
 
     name: str
@@ -72,6 +90,81 @@ class BenchmarkRecord:
     devices: int = 1
     placement: str = "replicate"
     scaling_efficiency: float | None = None
+    # Serving columns (schema v3) — None unless the plan had a ServeSpec.
+    serve_mode: str | None = None
+    serve_lanes: int | None = None
+    serve_requests: int | None = None
+    latency_p50_us: float | None = None
+    latency_p95_us: float | None = None
+    latency_p99_us: float | None = None
+    latency_max_us: float | None = None
+    achieved_qps: float | None = None
+    offered_qps: float | None = None
+    goodput_qps: float | None = None
+    serve_colocate: str | None = None
+    slowdown_vs_isolated: float | None = None
+
+    def apply_serve(
+        self,
+        stats,
+        *,
+        mode: str,
+        lanes: int,
+        colocate: str | None = None,
+        slowdown: float | None = None,
+    ) -> "BenchmarkRecord":
+        """Fold a ``serve.latency.LatencyStats`` into this record."""
+        self.serve_mode = mode
+        self.serve_lanes = lanes
+        self.serve_requests = stats.requests
+        self.latency_p50_us = stats.p50_us
+        self.latency_p95_us = stats.p95_us
+        self.latency_p99_us = stats.p99_us
+        self.latency_max_us = stats.max_us
+        self.achieved_qps = stats.achieved_qps
+        self.offered_qps = stats.offered_qps
+        self.goodput_qps = stats.goodput_qps
+        self.serve_colocate = colocate
+        self.slowdown_vs_isolated = slowdown
+        return self
+
+    @classmethod
+    def from_serve(
+        cls,
+        spec,
+        preset: int,
+        stats,
+        *,
+        mode: str,
+        lanes: int,
+        name: str | None = None,
+        colocate: str | None = None,
+        slowdown: float | None = None,
+        devices: int = 1,
+        placement: str = "replicate",
+    ) -> "BenchmarkRecord":
+        """A serve-only row (the co-location partner, which was served but
+        not separately measured/characterized): ``us_per_call`` is its p50
+        serving latency so tables stay meaningfully sortable."""
+        rec = cls(
+            name=name if name is not None else spec.name,
+            level=spec.level,
+            dwarf=spec.dwarf,
+            domain=spec.domain,
+            preset=preset,
+            us_per_call=stats.p50_us,
+            achieved_gflops=0.0,
+            achieved_gbps=0.0,
+            compute_util10=0,
+            memory_util10=0,
+            dominant="serve",
+            derived=f"colocated_with={colocate}" if colocate else "serve",
+            devices=devices,
+            placement=placement,
+        )
+        return rec.apply_serve(
+            stats, mode=mode, lanes=lanes, colocate=colocate, slowdown=slowdown
+        )
 
     @classmethod
     def from_measurement(
@@ -147,6 +240,18 @@ class BenchmarkRecord:
             if self.scaling_efficiency is not None
             else ""
         )
+        serve = ""
+        if self.serve_mode is not None:
+            serve = (
+                f";serve={self.serve_mode};lanes={self.serve_lanes};"
+                f"p50_us={self.latency_p50_us:.1f};"
+                f"p99_us={self.latency_p99_us:.1f};qps={self.achieved_qps:.1f}"
+            )
+            if self.slowdown_vs_isolated is not None:
+                serve += (
+                    f";colocate={self.serve_colocate};"
+                    f"slowdown={self.slowdown_vs_isolated:.2f}"
+                )
         if self.status != "ok":
             return (
                 f"{self.name},0.00,{self.devices},{self.placement},"
@@ -154,7 +259,7 @@ class BenchmarkRecord:
             )
         return (
             f"{self.name},{self.us_per_call:.2f},{self.devices},"
-            f"{self.placement},{self.derived}{eff}"
+            f"{self.placement},{self.derived}{eff}{serve}"
         )
 
 
@@ -170,12 +275,20 @@ class RunMetadata:
     devices: int = 1
     placement: str = "replicate"
     device_sweep: tuple[int, ...] = (1,)
+    serve: ServeSpec | None = None
 
     def __post_init__(self) -> None:
-        # JSON round-trips tuples as lists; normalize so loaded metadata
-        # compares equal to captured metadata.
+        # JSON round-trips tuples as lists and nested dataclasses as dicts;
+        # normalize so loaded metadata compares equal to captured metadata.
         if not isinstance(self.device_sweep, tuple):
             object.__setattr__(self, "device_sweep", tuple(self.device_sweep))
+        if isinstance(self.serve, dict):
+            fields = {f.name for f in dataclasses.fields(ServeSpec)}
+            object.__setattr__(
+                self,
+                "serve",
+                ServeSpec(**{k: v for k, v in self.serve.items() if k in fields}),
+            )
 
     @classmethod
     def capture(
@@ -185,6 +298,7 @@ class RunMetadata:
         devices: int = 1,
         placement: str = "replicate",
         device_sweep: tuple[int, ...] | None = None,
+        serve: ServeSpec | None = None,
     ) -> "RunMetadata":
         import jax
 
@@ -196,6 +310,7 @@ class RunMetadata:
             devices=devices,
             placement=placement,
             device_sweep=device_sweep if device_sweep is not None else (devices,),
+            serve=serve,
         )
 
 
@@ -249,14 +364,26 @@ def _record_from_dict(d: dict) -> BenchmarkRecord:
 
 
 def load_run(path: str) -> tuple[RunMetadata | None, list[BenchmarkRecord]]:
-    """Read either report format; metadata is None for legacy JSON arrays."""
-    with open(path) as f:
-        text = f.read()
+    """Read either report format; metadata is None for legacy JSON arrays.
+
+    Raises :class:`ReportError` (one clear line, no traceback for CLIs that
+    catch it) when the report is missing or holds no records at all.
+    """
+    try:
+        with open(path) as f:
+            text = f.read()
+    except OSError as e:
+        raise ReportError(f"cannot read report {path}: {e.strerror or e}") from None
     if text.lstrip().startswith("["):  # legacy JSON array
-        return None, [_record_from_dict(d) for d in json.loads(text)]
+        try:
+            return None, [_record_from_dict(d) for d in json.loads(text)]
+        except (json.JSONDecodeError, TypeError) as e:
+            raise ReportError(f"report {path} is not valid JSON: {e}") from None
     meta: RunMetadata | None = None
     records: list[BenchmarkRecord] = []
     lines = [ln for ln in text.splitlines() if ln.strip()]
+    if not lines:
+        raise ReportError(f"report {path} is empty (no metadata, no records)")
     for i, line in enumerate(lines):
         try:
             obj = json.loads(line)

@@ -15,6 +15,14 @@ Placement flags: ``--placement {replicate,shard}`` picks what multi-device
 runs put on each device; ``--scale-devices 1,2,4`` sweeps the selection
 across device counts, producing one record per (benchmark, pass, count)
 with ``scaling_efficiency`` on the multi-device rows.
+
+Serving flags: ``--serve {open,closed}`` runs every selected workload
+under generated load after measuring it (``--qps`` open-loop arrival rate,
+``--concurrency`` closed-loop in-flight cap, ``--lanes`` dispatch lanes,
+``--serve-duration`` seconds); ``--colocate NAME`` serves each workload
+against a partner benchmark and records both tenants' slowdown vs their
+isolated baselines. ``--cache-dir`` persists lowered HLO text across
+processes so repeat runs skip retracing.
 """
 
 from __future__ import annotations
@@ -24,7 +32,14 @@ import sys
 from typing import Any, Mapping, Sequence
 
 from repro.core.engine import Engine
-from repro.core.plan import PLACEMENT_MODES, ExecutionPlan, Placement, PlanError
+from repro.core.plan import (
+    PLACEMENT_MODES,
+    SERVE_MODES,
+    ExecutionPlan,
+    Placement,
+    PlanError,
+    ServeSpec,
+)
 from repro.core.results import BenchmarkRecord, to_csv_lines
 
 __all__ = ["run_suite", "main", "DEFAULT_ENGINE"]
@@ -32,6 +47,17 @@ __all__ = ["run_suite", "main", "DEFAULT_ENGINE"]
 # Shared across run_suite callers (figure drivers, examples, tests) so a
 # workload compiled for one section is reused by every later section.
 DEFAULT_ENGINE = Engine()
+
+_EPILOG = """\
+examples:
+  # open-loop serving: pathfinder at 200 QPS through 4 lanes for 3 s
+  python -m repro.core.suite --names pathfinder --serve open --qps 200 \\
+      --lanes 4 --serve-duration 3
+  # co-location interference: gemm and kmeans share the lanes; both rows
+  # carry slowdown-vs-isolated
+  python -m repro.core.suite --names gemm_f32_nn --serve closed \\
+      --concurrency 8 --lanes 4 --colocate kmeans
+"""
 
 
 def run_suite(
@@ -49,6 +75,7 @@ def run_suite(
     devices: int = 1,
     placement: str = "replicate",
     scale_devices: Sequence[int] | None = None,
+    serve: ServeSpec | None = None,
     report_path: str | None = None,
     jsonl_path: str | None = None,
     verbose: bool = True,
@@ -67,6 +94,7 @@ def run_suite(
         seed=seed,
         placement=Placement(devices=devices, mode=placement),
         device_sweep=tuple(scale_devices) if scale_devices is not None else None,
+        serve=serve,
     )
     result = (engine or DEFAULT_ENGINE).run(
         plan, report_path=report_path, jsonl_path=jsonl_path, verbose=verbose
@@ -109,8 +137,47 @@ def _parse_scale_devices(text: str | None) -> tuple[int, ...] | None:
     return counts
 
 
+def _parse_serve(args) -> ServeSpec | None:
+    """A ServeSpec when any serving flag was used (--colocate alone
+    implies a closed-loop serve), else None. Serve-tuning flags without a
+    serve mode are a configuration error, not silently dropped."""
+    tuning = {
+        "--qps": args.qps,
+        "--concurrency": args.concurrency,
+        "--lanes": args.lanes,
+        "--serve-duration": args.serve_duration,
+    }
+    if args.serve is None and args.colocate is None:
+        stray = [flag for flag, value in tuning.items() if value is not None]
+        if stray:
+            raise PlanError(
+                f"{', '.join(stray)} require --serve {{open,closed}} "
+                "or --colocate NAME"
+            )
+        return None
+    spec = ServeSpec()  # defaults live on the dataclass, not the CLI
+    return ServeSpec(
+        mode=args.serve or "closed",
+        qps=args.qps if args.qps is not None else 50.0,
+        concurrency=(
+            args.concurrency if args.concurrency is not None else spec.concurrency
+        ),
+        lanes=args.lanes if args.lanes is not None else spec.lanes,
+        duration_s=(
+            args.serve_duration
+            if args.serve_duration is not None
+            else spec.duration_s
+        ),
+        colocate=args.colocate,
+    )
+
+
 def main(argv: Sequence[str] | None = None) -> int:
-    ap = argparse.ArgumentParser(description="Run the Mirovia/Altis suite")
+    ap = argparse.ArgumentParser(
+        description="Run the Mirovia/Altis suite",
+        epilog=_EPILOG,
+        formatter_class=argparse.RawDescriptionHelpFormatter,
+    )
     ap.add_argument("--levels", type=int, nargs="*", default=[0, 1, 2])
     ap.add_argument("--names", type=str, nargs="*", default=None)
     ap.add_argument("--tags", type=str, nargs="*", default=None)
@@ -132,6 +199,30 @@ def main(argv: Sequence[str] | None = None) -> int:
                     metavar="N1,N2,...",
                     help="device-scaling sweep, e.g. 1,2,4,8: one record "
                          "per (benchmark, pass, count)")
+    ap.add_argument("--serve", choices=SERVE_MODES, default=None,
+                    help="serve each selected workload under load after "
+                         "measuring it: open-loop arrivals at --qps or "
+                         "closed-loop at --concurrency")
+    ap.add_argument("--qps", type=float, default=None,
+                    help="open-loop arrival rate (requests/s, default 50)")
+    ap.add_argument("--concurrency", type=int, default=None,
+                    help="closed-loop in-flight requests (also the "
+                         "open-loop in-flight cap; default 4)")
+    ap.add_argument("--lanes", type=int, default=None,
+                    help="dispatch lanes (HyperQ-style work queues, "
+                         "default 2)")
+    ap.add_argument("--serve-duration", type=float, default=None,
+                    metavar="SECONDS",
+                    help="serving duration per workload (default 2.0)")
+    ap.add_argument("--colocate", type=str, default=None, metavar="NAME",
+                    help="co-locate every served workload with this "
+                         "benchmark and record slowdown-vs-isolated "
+                         "(implies --serve closed)")
+    ap.add_argument("--cache-dir", type=str, default=None,
+                    help="persist lowered HLO text here (keyed by compile-"
+                         "cache key, versioned by jax version + backend) so "
+                         "repeat runs skip retracing; a CI accelerator — "
+                         "warm-run timings include a thin dispatch wrapper")
     ap.add_argument("--no-backward", action="store_true")
     ap.add_argument("--report", type=str, default=None, help="JSON report path")
     ap.add_argument("--jsonl", type=str, default=None,
@@ -174,10 +265,12 @@ def _run_cli(args) -> list[BenchmarkRecord]:
         devices=args.devices,
         placement=args.placement,
         scale_devices=_parse_scale_devices(args.scale_devices),
+        serve=_parse_serve(args),
         include_backward=not args.no_backward,
         report_path=args.report,
         jsonl_path=args.jsonl,
         verbose=False,
+        engine=Engine(cache_dir=args.cache_dir) if args.cache_dir else None,
     )
 
 

@@ -1,0 +1,55 @@
+"""Concurrent-dispatch serving subsystem (paper §V-B generalized suite-wide).
+
+ALTIS argues modern GPU runtimes are defined by their concurrency features
+— HyperQ work queues, asynchronous streams, kernel co-location — and the
+original suite only ever measured workloads in isolation. This package
+turns any registered workload (or a co-located pair) into a *served*
+workload under generated load:
+
+- :mod:`repro.serve.lanes` — N dispatch lanes exploiting JAX async
+  dispatch; each lane is an ordered window of in-flight device
+  computations that blocks only on its own oldest result (the HyperQ
+  work-queue analogue), with ``loop`` / ``lanes`` / ``batched`` dispatch
+  modes generalizing the old feat_hyperq split.
+- :mod:`repro.serve.loadgen` — deterministic seeded load generation:
+  open-loop Poisson arrivals at a target QPS and closed-loop issue at a
+  fixed concurrency, with warmup exclusion.
+- :mod:`repro.serve.latency` — per-request latency capture folded into
+  p50/p95/p99/max percentiles, achieved QPS, and goodput.
+- :mod:`repro.serve.interference` — co-locate workload pairs across split
+  lanes and report the slowdown-vs-isolated matrix.
+
+The engine (``core/engine.py``) drives all of this as a ``serve`` stage
+after ``measure``, reusing the compile cache's executables — serving never
+recompiles what measuring already compiled.
+"""
+
+from repro.serve.lanes import (
+    DISPATCH_MODES,
+    Completion,
+    DispatchLane,
+    LaneSet,
+    run_closed_loop,
+    run_open_loop,
+    serve_loop,
+)
+from repro.serve.latency import LatencyStats, stats_from_completions
+from repro.serve.loadgen import Request, closed_loop_schedule, open_loop_schedule
+from repro.serve.interference import ColocationResult, colocate_closed_loop
+
+__all__ = [
+    "DISPATCH_MODES",
+    "Completion",
+    "DispatchLane",
+    "LaneSet",
+    "run_closed_loop",
+    "run_open_loop",
+    "serve_loop",
+    "LatencyStats",
+    "stats_from_completions",
+    "Request",
+    "closed_loop_schedule",
+    "open_loop_schedule",
+    "ColocationResult",
+    "colocate_closed_loop",
+]

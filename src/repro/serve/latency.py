@@ -1,0 +1,79 @@
+"""Per-request latency capture → serving statistics.
+
+Folds a list of :class:`~repro.serve.lanes.Completion` into the numbers a
+serving benchmark reports: latency percentiles (p50/p95/p99/max over
+non-warmup requests), achieved QPS (completions per measured second), and
+goodput (completions under an optional latency SLO per measured second —
+without an SLO every completed request is good, so goodput == achieved).
+
+The measured window starts at the first non-warmup submission and ends at
+the last completion, so pipeline fill (warmup) neither inflates latency
+nor deflates throughput.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+from repro.serve.lanes import Completion
+
+__all__ = ["LatencyStats", "stats_from_completions"]
+
+
+@dataclasses.dataclass(frozen=True)
+class LatencyStats:
+    """Serving statistics over one run's non-warmup completions."""
+
+    requests: int  # measured (non-warmup) completions
+    warmup_requests: int
+    p50_us: float
+    p95_us: float
+    p99_us: float
+    max_us: float
+    achieved_qps: float
+    goodput_qps: float  # completions under the SLO per second (== achieved without one)
+    offered_qps: float | None = None  # open-loop target; None for closed loop
+
+    def derived(self) -> str:
+        """The compact ``k=v;...`` form figure drivers put in CSV rows."""
+        offered = f";offered_qps={self.offered_qps:.1f}" if self.offered_qps else ""
+        return (
+            f"requests={self.requests};p50_us={self.p50_us:.1f};"
+            f"p95_us={self.p95_us:.1f};p99_us={self.p99_us:.1f};"
+            f"qps={self.achieved_qps:.1f}{offered}"
+        )
+
+
+def stats_from_completions(
+    completions: Sequence[Completion],
+    *,
+    offered_qps: float | None = None,
+    slo_us: float | None = None,
+) -> LatencyStats:
+    measured = [c for c in completions if not c.warmup]
+    warmup = len(completions) - len(measured)
+    if not measured:
+        raise ValueError(
+            f"no measured completions ({warmup} warmup-only); "
+            "serve longer or lower the warmup count"
+        )
+    lat = np.array([c.latency_us for c in measured], dtype=np.float64)
+    window_s = max(
+        max(c.t_done for c in measured) - min(c.t_submit for c in measured),
+        1e-9,
+    )
+    good = len(measured) if slo_us is None else int((lat <= slo_us).sum())
+    return LatencyStats(
+        requests=len(measured),
+        warmup_requests=warmup,
+        p50_us=float(np.percentile(lat, 50)),
+        p95_us=float(np.percentile(lat, 95)),
+        p99_us=float(np.percentile(lat, 99)),
+        max_us=float(lat.max()),
+        achieved_qps=len(measured) / window_s,
+        goodput_qps=good / window_s,
+        offered_qps=offered_qps,
+    )

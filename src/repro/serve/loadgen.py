@@ -1,0 +1,76 @@
+"""Deterministic load generation for the serving subsystem.
+
+Two canonical load models (the Milabench / serving-benchmark split):
+
+- **open loop** (:func:`open_loop_schedule`): requests arrive on a Poisson
+  process at a target QPS, independent of completions — the model that
+  exposes queueing under overload. Interarrival gaps are drawn from a
+  seeded ``numpy`` generator, so a schedule is *fully deterministic* for a
+  fixed ``(qps, duration_s, seed)`` triple and reproducible across
+  processes and platforms.
+- **closed loop** (:func:`closed_loop_schedule`): a fixed number of
+  always-pending requests; the runner (``serve.lanes``) issues the next
+  one the moment a slot frees, so arrival times are execution-driven and
+  the schedule is just an indexed request list.
+
+Warmup exclusion: the first ``warmup`` requests of either schedule are
+flagged ``warmup=True``; latency statistics (``serve.latency``) drop them,
+mirroring ``harness.time_fn``'s warmup iterations.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+__all__ = ["Request", "open_loop_schedule", "closed_loop_schedule"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Request:
+    """One generated request: arrival offset seconds from serve start
+    (0.0 for closed-loop, where issue time is execution-driven)."""
+
+    index: int
+    arrival_s: float = 0.0
+    warmup: bool = False
+
+
+def open_loop_schedule(
+    *,
+    qps: float,
+    duration_s: float,
+    seed: int = 0,
+    warmup: int = 0,
+    max_requests: int = 100_000,
+) -> tuple[Request, ...]:
+    """Poisson arrivals at ``qps`` for ``duration_s`` seconds.
+
+    Deterministic for a fixed seed: the same triple always yields the same
+    arrival offsets. ``max_requests`` bounds pathological qps*duration
+    products (the schedule is materialized up front).
+    """
+    if qps <= 0:
+        raise ValueError(f"open-loop qps must be > 0, got {qps}")
+    if duration_s <= 0:
+        raise ValueError(f"duration_s must be > 0, got {duration_s}")
+    rng = np.random.default_rng(seed)
+    out: list[Request] = []
+    t = 0.0
+    while len(out) < max_requests:
+        t += float(rng.exponential(1.0 / qps))
+        if t >= duration_s:
+            break
+        out.append(Request(index=len(out), arrival_s=t, warmup=len(out) < warmup))
+    return tuple(out)
+
+
+def closed_loop_schedule(n_requests: int, *, warmup: int = 0) -> tuple[Request, ...]:
+    """``n_requests`` always-pending requests (arrival_s=0)."""
+    if n_requests < 1:
+        raise ValueError(f"n_requests must be >= 1, got {n_requests}")
+    return tuple(
+        Request(index=i, arrival_s=0.0, warmup=i < warmup)
+        for i in range(n_requests)
+    )

@@ -1,0 +1,103 @@
+"""Persistent HLO-text compile cache: warm runs skip retracing, failures
+fall back to the normal trace-and-compile path, and entries are versioned
+by toolchain."""
+
+import json
+import os
+
+import jax
+
+from repro.core.engine import Engine
+from repro.core.plan import ExecutionPlan
+
+FAST = dict(preset=0, iters=1, warmup=0, include_backward=False)
+
+
+def _version_dir(root: str) -> str:
+    (sub,) = os.listdir(root)  # exactly one toolchain dir for this process
+    return os.path.join(root, sub)
+
+
+def test_cold_run_populates_cache_dir_with_versioned_entries(tmp_path):
+    root = str(tmp_path / "hlo")
+    eng = Engine(cache_dir=root)
+    res = eng.run(ExecutionPlan(names=("pathfinder", "softmax"), **FAST))
+    assert [r.status for r in res.records] == ["ok", "ok"]
+    assert eng.disk_cache.stores == 2
+    assert eng.disk_cache.hits == 0
+    version_dir = _version_dir(root)
+    # Versioned by toolchain AND a content hash of the repro package, so
+    # an edited kernel misses instead of replaying its old lowering.
+    assert os.path.basename(version_dir).startswith(
+        f"jax-{jax.__version__}-{jax.default_backend()}-"
+    )
+    entries = os.listdir(version_dir)
+    assert len(entries) == 2 and all(e.endswith(".json") for e in entries)
+    payload = json.load(open(os.path.join(version_dir, entries[0])))
+    assert payload["hlo"].lstrip().startswith("module")
+    assert "cost" in payload and "memory" in payload
+
+
+def test_warm_run_hits_disk_and_matches_cold_records(tmp_path):
+    root = str(tmp_path / "hlo")
+    plan = ExecutionPlan(names=("pathfinder",), **FAST)
+    cold = Engine(cache_dir=root).run(plan)
+
+    warm_engine = Engine(cache_dir=root)
+    warm = warm_engine.run(plan)
+    assert warm_engine.disk_cache.hits == 1
+    assert warm_engine.disk_cache.misses == 0
+    (c,), (w,) = cold.records, warm.records
+    assert w.status == "ok"
+    assert w.name == c.name
+    # The stored characterization reproduces the roofline analysis.
+    assert w.dominant == c.dominant
+    assert w.derived == c.derived
+    assert w.us_per_call > 0
+
+
+def test_corrupt_cache_entry_falls_back_to_retrace(tmp_path):
+    root = str(tmp_path / "hlo")
+    plan = ExecutionPlan(names=("pathfinder",), **FAST)
+    Engine(cache_dir=root).run(plan)
+    version_dir = _version_dir(root)
+    for entry in os.listdir(version_dir):
+        with open(os.path.join(version_dir, entry), "w") as f:
+            f.write("{not json")
+
+    eng = Engine(cache_dir=root)
+    res = eng.run(plan)
+    assert [r.status for r in res.records] == ["ok"]
+    assert eng.disk_cache.hits == 0
+    assert eng.disk_cache.misses == 1
+    assert eng.disk_cache.stores == 1  # the retrace re-stored a good entry
+
+
+def test_disk_cache_skips_multi_device_entries(tmp_path):
+    import subprocess
+    import sys
+    import textwrap
+
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = src
+    script = textwrap.dedent(f"""
+        from repro.core.engine import Engine
+        from repro.core.plan import ExecutionPlan, Placement
+
+        eng = Engine(cache_dir={str(tmp_path / 'hlo')!r})
+        res = eng.run(ExecutionPlan(
+            names=("gemm_f32_nn",), preset=0, iters=1, warmup=0,
+            include_backward=False,
+            placement=Placement(devices=4, mode="shard"),
+        ))
+        assert res.records[0].status == "ok", res.records[0].error
+        assert eng.disk_cache.stores == 0, eng.disk_cache.stores
+        print("OK")
+    """)
+    out = subprocess.run(
+        [sys.executable, "-c", script], env=env, capture_output=True,
+        text=True, timeout=420,
+    )
+    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"

@@ -5,6 +5,11 @@
 # With --multi-device, instead run the placement smoke: force 8 host
 # devices and drive a sharded device-scaling sweep, asserting zero
 # status=error records and populated scaling_efficiency columns.
+#
+# With --serve, instead run the serving smoke on forced host devices: a
+# tiny closed-loop serve (2 lanes, ~2 s) asserting schema-v3 latency/QPS
+# columns, plus one co-location pair asserting slowdown-vs-isolated on
+# both tenants' rows.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -41,6 +46,57 @@ sharded = [r for r in multi if r.placement == "shard"]
 assert sharded, "no workload actually sharded in the sweep"
 print(f"multi-device smoke: {len(records)} records over counts {counts}, "
       f"{len(sharded)} sharded rows, 0 errors")
+PY
+  exit 0
+fi
+
+if [[ "${1:-}" == "--serve" ]]; then
+  export XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}"
+
+  python -m repro.core.suite \
+    --names pathfinder --preset 0 --iters 1 --warmup 0 --no-backward \
+    --serve closed --concurrency 4 --lanes 2 --serve-duration 2 \
+    --jsonl "$out/serve.jsonl"
+
+  python -m repro.core.suite \
+    --names pathfinder --preset 0 --iters 1 --warmup 0 --no-backward \
+    --serve closed --concurrency 4 --lanes 2 --serve-duration 1 \
+    --colocate gemm_f32_nn --jsonl "$out/colocate.jsonl"
+
+  python - "$out/serve.jsonl" "$out/colocate.jsonl" <<'PY'
+import sys
+
+from repro.core.results import load_run
+
+meta, records = load_run(sys.argv[1])
+assert meta is not None and meta.schema_version >= 3, meta
+assert meta.serve is not None and meta.serve.mode == "closed", meta.serve
+bad = [r for r in records if r.status != "ok"]
+for r in bad:
+    print(f"ERROR {r.name}: {r.error}", file=sys.stderr)
+assert not bad, f"{len(bad)} error records in the serve smoke"
+(rec,) = records
+assert rec.serve_mode == "closed" and rec.serve_lanes == 2, rec
+assert rec.latency_p50_us and rec.latency_p95_us and rec.latency_p99_us
+assert rec.latency_p50_us <= rec.latency_p99_us <= rec.latency_max_us
+assert rec.achieved_qps and rec.achieved_qps > 0, rec
+print(f"serve smoke: {rec.name} p50={rec.latency_p50_us:.0f}us "
+      f"p99={rec.latency_p99_us:.0f}us qps={rec.achieved_qps:.0f}")
+
+meta, records = load_run(sys.argv[2])
+assert meta.serve is not None and meta.serve.colocate == "gemm_f32_nn"
+bad = [r for r in records if r.status != "ok"]
+for r in bad:
+    print(f"ERROR {r.name}: {r.error}", file=sys.stderr)
+assert not bad, f"{len(bad)} error records in the co-location smoke"
+assert len(records) == 2, [r.name for r in records]
+primary, partner = records
+assert primary.serve_colocate == "gemm_f32_nn", primary
+assert partner.name == "gemm_f32_nn@pathfinder", partner.name
+for r in records:
+    assert r.slowdown_vs_isolated is not None and r.slowdown_vs_isolated > 0, r
+print("co-location smoke: slowdowns "
+      + ", ".join(f"{r.name}={r.slowdown_vs_isolated:.2f}" for r in records))
 PY
   exit 0
 fi
