@@ -1,21 +1,31 @@
-"""Concurrency figure: dispatch-lane speedup and co-location interference.
+"""Concurrency figure: dispatch-lane speedup, client architectures, and
+co-location interference.
 
 The §V-B HyperQ study, generalized suite-wide through the serving
 subsystem (``repro.serve``): any registered workload is served closed-loop
-at each lane count in the sweep, and the dispatch speedup is its achieved
-QPS over the single-lane serial baseline (lanes=1, concurrency=1 — one
-request in flight, the no-concurrency floor). The paper's curve saturates
-near the 32 hardware work queues; here saturation lands wherever host
-dispatch stops hiding behind device execution.
+at each lane count in the sweep — under *both* host issue architectures,
+side by side — and the dispatch speedup is its achieved QPS over the
+single-lane serial baseline (lanes=1, concurrency=1 — one request in
+flight, the no-concurrency floor). The paper's curve saturates near the
+32 hardware work queues; here saturation lands wherever host dispatch
+stops hiding behind device execution — and comparing the ``single``
+client (every lane issued from one thread) against the ``threaded``
+client (one issuing thread per lane) shows exactly where the
+single-threaded client itself was the bottleneck. Threaded rows carry
+the measured per-request dispatch overhead.
+
+Both clients serve the *same cached executable*: one compile per
+workload feeds the entire sweep (the engine's compile cache is keyed on
+the workload, not the serving client), and the script prints the cache
+traffic so "no recompile" is visible, not assumed.
 
 The co-location half serves a workload pair through split lanes
 (``ServeSpec.colocate``) and reports both tenants' p50 slowdown vs their
 isolated baselines — the §V-B kernel co-location experiment as a table.
 
 As a section (``benchmarks/run.py --sections fig_concurrency``) it emits
-the standard CSV rows; as a script it renders the two tables. Everything
-routes through ``run_suite`` and the shared engine, so serving reuses the
-executables the measure stage compiled.
+the standard CSV rows; as a script it renders the tables. Everything
+routes through ``run_suite`` and the shared engine.
 """
 
 from __future__ import annotations
@@ -28,9 +38,10 @@ if __package__ in (None, ""):  # `python benchmarks/fig_concurrency.py`
 
 from benchmarks.common import Row, parse_derived, record_rows
 from repro.core import run_suite
-from repro.core.plan import ServeSpec
+from repro.core.plan import SERVE_CLIENTS, ServeSpec
 
 DEFAULT_LANES = (1, 2, 4, 8, 16, 32)
+DEFAULT_CLIENTS = SERVE_CLIENTS  # ("single", "threaded")
 # One wavefront DP kernel (the paper's HyperQ subject) and one MXU kernel,
 # so the dispatch curve and the interference pair cover both regimes.
 DEFAULT_NAMES = ("pathfinder", "gemm_f32_nn")
@@ -53,12 +64,14 @@ def lane_sweep_rows(
     names=DEFAULT_NAMES,
     lanes_sweep=DEFAULT_LANES,
     duration_s: float = 0.3,
+    clients=DEFAULT_CLIENTS,
 ) -> list[Row]:
-    """One row per (workload, lane count): achieved QPS plus the dispatch
-    speedup over the same workload's narrowest-lane baseline (lanes=1 when
-    the sweep includes it — one request in flight, the serial floor)."""
+    """One row per (workload, client, lane count): achieved QPS plus the
+    dispatch speedup over the same (workload, client)'s narrowest-lane
+    baseline (lanes=1 when the sweep includes it — one request in flight,
+    the serial floor). Threaded rows add ``dispatch_overhead_us``."""
     out: list[Row] = []
-    base_qps: dict[str, float] = {}
+    base_qps: dict[tuple[str, str], float] = {}
     # Ascending order puts the baseline first, so every later row can
     # carry a speedup no matter what subset the caller swept.
     sweep = sorted(set(lanes_sweep))
@@ -67,29 +80,42 @@ def lane_sweep_rows(
         # wider sweeps keep 2 in-flight requests per lane, the paper's
         # N-kernels-on-N-queues shape.
         concurrency = 1 if n == 1 else 2 * n
-        serve = ServeSpec(
-            mode="closed", concurrency=concurrency, lanes=n,
-            duration_s=duration_s,
-        )
-        records = run_suite(names=list(names), preset=preset, serve=serve, **FAST)
-        for r in records:
-            if r.status == "ok" and r.achieved_qps:
-                base_qps.setdefault(r.name, r.achieved_qps)
-
-        def extra(r, n=n, concurrency=concurrency):
-            base = base_qps.get(r.name)
-            speedup = (
-                f"{r.achieved_qps / base:.2f}" if base and r.achieved_qps else "-"
+        for client in clients:
+            serve = ServeSpec(
+                mode="closed", concurrency=concurrency, lanes=n,
+                duration_s=duration_s, client=client,
             )
-            return (
-                f"lanes={n};concurrency={concurrency};"
-                f"dispatch_speedup={speedup};"
+            records = run_suite(
+                names=list(names), preset=preset, serve=serve, **FAST
             )
+            for r in records:
+                if r.status == "ok" and r.achieved_qps:
+                    base_qps.setdefault((r.name, client), r.achieved_qps)
 
-        out.extend(
-            (f"{name}.l{n}", us, derived)
-            for name, us, derived in _serve_rows("fig_concurrency", records, extra)
-        )
+            def extra(r, n=n, concurrency=concurrency, client=client):
+                base = base_qps.get((r.name, client))
+                speedup = (
+                    f"{r.achieved_qps / base:.2f}"
+                    if base and r.achieved_qps
+                    else "-"
+                )
+                overhead = (
+                    f"{r.dispatch_overhead_us:.1f}"
+                    if r.dispatch_overhead_us is not None
+                    else "-"
+                )
+                return (
+                    f"client={client};lanes={n};concurrency={concurrency};"
+                    f"dispatch_speedup={speedup};"
+                    f"dispatch_overhead_us={overhead};"
+                )
+
+            out.extend(
+                (f"{name}.{client}.l{n}", us, derived)
+                for name, us, derived in _serve_rows(
+                    "fig_concurrency", records, extra
+                )
+            )
     return out
 
 
@@ -141,14 +167,21 @@ def main() -> int:
     ap.add_argument("--preset", type=int, default=0)
     ap.add_argument("--names", nargs="*", default=list(DEFAULT_NAMES))
     ap.add_argument("--lanes", type=int, nargs="*", default=list(DEFAULT_LANES))
+    ap.add_argument("--clients", nargs="*", choices=list(SERVE_CLIENTS),
+                    default=list(DEFAULT_CLIENTS),
+                    help="host issue architectures to sweep side by side")
     ap.add_argument("--duration", type=float, default=0.3)
     args = ap.parse_args()
 
+    from repro.core.suite import DEFAULT_ENGINE
+
+    misses0 = DEFAULT_ENGINE.cache.misses
     sweep = lane_sweep_rows(
         preset=args.preset,
         names=tuple(args.names),
         lanes_sweep=tuple(args.lanes),
         duration_s=args.duration,
+        clients=tuple(args.clients),
     )
     ok = [row for row in sweep if "qps=" in row[2]]
     if not ok:
@@ -159,27 +192,41 @@ def main() -> int:
         )
         return 1
 
-    # Pivot: benchmark x lane count -> (qps, speedup).
-    table: dict[str, dict[int, tuple[float, str]]] = {}
+    # Pivot: (benchmark, client) x lane count -> (qps, speedup).
+    table: dict[tuple[str, str], dict[int, tuple[float, str]]] = {}
     counts: list[int] = []
     for name, _us, derived in ok:
         fields = parse_derived(derived)
         n = int(fields["lanes"])
         if n not in counts:
             counts.append(n)
-        bench = name.removeprefix("fig_concurrency.").rsplit(".l", 1)[0]
-        table.setdefault(bench, {})[n] = (
+        client = fields.get("client", "single")
+        bench = (
+            name.removeprefix("fig_concurrency.")
+            .rsplit(".l", 1)[0]
+            .removesuffix(f".{client}")
+        )
+        table.setdefault((bench, client), {})[n] = (
             float(fields["qps"]), fields["dispatch_speedup"]
         )
-    print(f"{'benchmark':<28}" + "".join(
+    label_w = 34
+    print(f"{'benchmark [client]':<{label_w}}" + "".join(
         f"{f'{n}-lane qps':>14}{'speedup':>10}" for n in counts
     ))
-    for bench, per in table.items():
-        line = f"{bench:<28}"
+    for (bench, client), per in table.items():
+        line = f"{f'{bench} [{client}]':<{label_w}}"
         for n in counts:
             qps, speedup = per.get(n, (0.0, "-"))
             line += f"{qps:>14.1f}{speedup:>10}"
         print(line)
+    # One compile per served (workload, pass): both clients and every lane
+    # count reuse the cached executable. Print the traffic as evidence.
+    print(
+        f"# compile cache: {DEFAULT_ENGINE.cache.misses - misses0} misses "
+        f"across {len(args.clients)} clients x {len(counts)} lane counts "
+        f"({DEFAULT_ENGINE.cache.hits} hits total)",
+        file=sys.stderr,
+    )
 
     print()
     print(f"{'pair (tenant row)':<44}{'p50_us':>10}{'qps':>10}{'slowdown':>10}")

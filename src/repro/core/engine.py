@@ -24,7 +24,11 @@ declarative half). For every selected benchmark the engine runs the stages:
   :class:`~repro.core.plan.ServeSpec`): run the *same cached executable*
   under generated load through ``repro.serve`` — open-loop arrivals at a
   target QPS or closed-loop at fixed concurrency, dispatched across N
-  lanes — and fold latency percentiles / achieved QPS into the record.
+  lanes by the spec's client (``single``: every lane issued from this
+  thread; ``threaded``: one issuing thread per lane with per-lane
+  deterministic sub-schedules and dispatch-overhead accounting) — and
+  fold latency percentiles / achieved QPS / truncation honesty into the
+  record.
   With ``colocate``, the workload is additionally served against a
   partner benchmark on split lanes and both rows carry their p50
   slowdown vs the isolated baseline. Serving never compiles anything the
@@ -288,10 +292,23 @@ class Engine:
     # -- serving -----------------------------------------------------------
 
     def _serve_call(self, call, serve: ServeSpec, seed: int):
-        """One isolated serving run of an already-compiled callable."""
+        """One isolated serving run of an already-compiled callable.
+
+        Selects the host issue architecture the spec asked for: the
+        ``single`` client dispatches every lane from this thread; the
+        ``threaded`` client gives each lane its own issuing thread fed
+        from a per-lane deterministic sub-schedule, and its per-request
+        dispatch overhead lands in the stats. Open-loop stats carry the
+        schedule's ``truncated`` flag so a request-capped run never
+        reports the full target as its offered load.
+        """
+        from repro.serve.client import (
+            run_closed_loop_threaded,
+            run_open_loop_threaded,
+        )
         from repro.serve.lanes import run_closed_loop, run_open_loop
         from repro.serve.latency import stats_from_completions
-        from repro.serve.loadgen import open_loop_schedule
+        from repro.serve.loadgen import open_loop_lane_schedules, open_loop_schedule
 
         # Fill the whole pipeline (every in-flight slot, not just one per
         # lane) before measuring, like time_fn's warmup: early requests
@@ -299,6 +316,25 @@ class Engine:
         # state and would bias the percentiles low.
         warmup = max(serve.concurrency, serve.lanes, 2)
         if serve.mode == "open":
+            if serve.client == "threaded":
+                lane_schedules = open_loop_lane_schedules(
+                    qps=serve.qps,
+                    duration_s=serve.duration_s,
+                    n_lanes=serve.lanes,
+                    seed=seed,
+                    warmup=warmup,
+                )
+                result = run_open_loop_threaded(
+                    call, lane_schedules, concurrency=serve.concurrency
+                )
+                return stats_from_completions(
+                    result.completions,
+                    offered_qps=serve.qps,
+                    slo_us=serve.slo_us,
+                    truncated=any(s.truncated for s in lane_schedules),
+                    dispatch_overhead_us=result.dispatch_overhead_us,
+                    n_lanes=serve.lanes,
+                )
             schedule = open_loop_schedule(
                 qps=serve.qps,
                 duration_s=serve.duration_s,
@@ -308,7 +344,27 @@ class Engine:
             completions = run_open_loop(
                 call, schedule, n_lanes=serve.lanes, concurrency=serve.concurrency
             )
-            return stats_from_completions(completions, offered_qps=serve.qps)
+            return stats_from_completions(
+                completions,
+                offered_qps=serve.qps,
+                slo_us=serve.slo_us,
+                truncated=schedule.truncated,
+                n_lanes=serve.lanes,
+            )
+        if serve.client == "threaded":
+            result = run_closed_loop_threaded(
+                call,
+                concurrency=serve.concurrency,
+                n_lanes=serve.lanes,
+                duration_s=serve.duration_s,
+                warmup=warmup,
+            )
+            return stats_from_completions(
+                result.completions,
+                slo_us=serve.slo_us,
+                dispatch_overhead_us=result.dispatch_overhead_us,
+                n_lanes=serve.lanes,
+            )
         completions = run_closed_loop(
             call,
             concurrency=serve.concurrency,
@@ -316,7 +372,9 @@ class Engine:
             duration_s=serve.duration_s,
             warmup=warmup,
         )
-        return stats_from_completions(completions)
+        return stats_from_completions(
+            completions, slo_us=serve.slo_us, n_lanes=serve.lanes
+        )
 
     def _stage_serve(
         self,
@@ -361,6 +419,7 @@ class Engine:
             n_lanes=serve.lanes,
             duration_s=serve.duration_s,
             warmup=max(serve.concurrency, serve.lanes, 2),
+            slo_us=serve.slo_us,
         )
         partner = BenchmarkRecord.from_serve(
             partner_spec,
@@ -368,6 +427,7 @@ class Engine:
             result.colocated[b_name],
             mode=serve.mode,
             lanes=serve.lanes,
+            client=serve.client,
             name=f"{b_name}@{a_name}",
             colocate=a_name,
             slowdown=result.slowdown(b_name),
@@ -498,6 +558,10 @@ class Engine:
         finally:
             if writer is not None:
                 writer.close()
+        if verbose and self.disk_cache is not None:
+            # A disk cache that never hits is otherwise invisible: say what
+            # it did, and why any warm load fell back to retracing.
+            print(f"# {self.disk_cache.summary()}", flush=True)
         if report_path:
             write_report(records, report_path)
         return RunResult(
@@ -574,6 +638,7 @@ class Engine:
                     stats,
                     mode=plan.serve.mode,
                     lanes=plan.serve.lanes,
+                    client=plan.serve.client,
                     colocate=colocate,
                     slowdown=slowdown,
                 )

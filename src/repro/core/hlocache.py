@@ -19,9 +19,14 @@ multi-device lowerings embed placement-dependent shardings and always
 retrace.
 
 Every warm load is validated by one trial execution; *any* failure —
-corrupt file, toolchain drift, call-convention mismatch — silently falls
-back to the normal trace-and-compile path. The cache can only ever make a
-run faster, never wronger.
+corrupt file, toolchain drift, call-convention mismatch — falls back to
+the normal trace-and-compile path. The cache can only ever make a run
+faster, never wronger. Fallbacks are *counted and explained* rather than
+swallowed: ``fallback_count`` / ``fallback_reasons`` / ``last_fallback``
+record why each present-but-unusable entry was rejected (a missing file
+is an ordinary cold miss, not a fallback), and ``summary()`` is the
+one-line diagnosis the engine prints in verbose runs — so a cache that
+never hits is diagnosable instead of invisible.
 
 Caveat: warm entries execute through the backend client's raw
 call convention rather than ``jax.jit``'s dispatch path, which adds a few
@@ -48,6 +53,7 @@ from repro.core.metrics import roofline_terms
 __all__ = ["HloDiskCache"]
 
 _FORMAT_VERSION = 1
+_MAX_REASONS = 20  # keep fallback_reasons bounded on pathological runs
 
 
 def _flat_out_structure(out_info: Any) -> tuple[int, bool] | None:
@@ -98,10 +104,36 @@ class HloDiskCache:
         self.hits = 0  # warm loads that produced a working executable
         self.misses = 0  # lookups that fell back to tracing
         self.stores = 0
+        # Fallback diagnostics: a *fallback* is a present-but-unusable
+        # entry (corrupt payload, stale format, failed trial call) — a
+        # missing file is just a cold miss and is not recorded here.
+        self.fallback_count = 0
+        self.fallback_reasons: list[str] = []  # capped at _MAX_REASONS
+        self.last_fallback: str | None = None
 
     def _path(self, key: tuple) -> str:
         digest = hashlib.sha256(repr(key).encode()).hexdigest()[:24]
         return os.path.join(self.root, f"{digest}.json")
+
+    def _note_fallback(self, key: tuple, exc: BaseException) -> None:
+        name = key[0] if key else "?"
+        reason = " ".join(f"{name}: {type(exc).__name__}: {exc}".split())
+        if len(reason) > 200:
+            reason = reason[:197] + "..."
+        self.fallback_count += 1
+        self.last_fallback = reason
+        if len(self.fallback_reasons) < _MAX_REASONS:
+            self.fallback_reasons.append(reason)
+
+    def summary(self) -> str:
+        """One-line cache diagnosis for verbose engine output."""
+        line = (
+            f"hlocache: hits={self.hits} misses={self.misses} "
+            f"stores={self.stores} fallbacks={self.fallback_count}"
+        )
+        if self.last_fallback is not None:
+            line += f" last_fallback=[{self.last_fallback}]"
+        return line
 
     # -- store -------------------------------------------------------------
 
@@ -147,8 +179,13 @@ class HloDiskCache:
     ) -> tuple[Callable[..., Any], CompiledInfo] | None:
         """Compile the stored HLO text directly (no retrace) and rebuild the
         memoized characterization. One trial execution validates the
-        call convention; any failure returns None (caller retraces)."""
+        call convention; any failure returns None (caller retraces) and —
+        unless the entry simply wasn't there — is counted and named in
+        the fallback diagnostics."""
         path = self._path(key)
+        if not os.path.exists(path):
+            self.misses += 1  # cold miss: nothing to fall back from
+            return None
         try:
             with open(path) as f:
                 payload = json.load(f)
@@ -168,8 +205,9 @@ class HloDiskCache:
                 ),
                 hlo_collectives_bytes=float(payload["collective_bytes"]),
             )
-        except Exception:  # noqa: BLE001 — any problem means "retrace"
+        except Exception as e:  # noqa: BLE001 — any problem means "retrace"
             self.misses += 1
+            self._note_fallback(key, e)
             return None
         self.hits += 1
         return executable, info

@@ -9,8 +9,9 @@ device count plus mode, ``replicate`` or ``shard``, realized through
 ``runtime/sharding`` helpers; ``device_sweep`` runs the same selection at
 several device counts for scaling curves), and *under what load* (an
 optional :class:`ServeSpec` — open/closed-loop serving through N dispatch
-lanes, with optional co-location; realized by the engine's serve stage
-via ``repro.serve``).
+lanes issued by a single-threaded or thread-per-lane client, with
+optional SLO goodput and co-location; realized by the engine's serve
+stage via ``repro.serve``).
 
 Plans carry no execution state: the engine (``core/engine.py``) consumes a
 plan, owns the compilation cache and the stage sequence, and emits records.
@@ -32,10 +33,12 @@ __all__ = [
     "PlanError",
     "PLACEMENT_MODES",
     "SERVE_MODES",
+    "SERVE_CLIENTS",
 ]
 
 PLACEMENT_MODES = ("replicate", "shard")
 SERVE_MODES = ("open", "closed")
+SERVE_CLIENTS = ("single", "threaded")
 
 
 class PlanError(ValueError):
@@ -82,11 +85,21 @@ class ServeSpec:
     - ``mode="open"``: Poisson arrivals at ``qps`` for ``duration_s``
       seconds, deterministic for the plan's seed; ``concurrency`` caps
       total in-flight work under overload.
+    - ``client``: the host-side issue architecture. ``single`` dispatches
+      every lane from one host thread (the pre-threaded behaviour);
+      ``threaded`` gives each lane its own issuing thread fed from a
+      deterministic per-lane sub-schedule, so host-side contention between
+      lanes becomes part of the measurement (``repro.serve.client``).
+    - ``slo_us``: optional latency SLO; rows then carry ``goodput_qps``
+      (completions with latency <= the SLO per second — a request at
+      exactly the SLO counts as good).
     - ``colocate``: serve every selected workload *paired* with this
       registered benchmark, splitting the lanes between the two tenants,
       and record each tenant's slowdown vs its isolated baseline. A
       closed-loop measurement (open arrivals would conflate queueing with
-      interference), so it requires ``mode="closed"``.
+      interference), so it requires ``mode="closed"``; its dispatch is
+      single-threaded by construction (tenants alternate submissions), so
+      it requires ``client="single"``.
 
     The engine runs serving as a stage after ``measure``, calling the
     *same cached executable* the timer used — a serve run never recompiles
@@ -99,11 +112,17 @@ class ServeSpec:
     lanes: int = 2
     duration_s: float = 2.0
     colocate: str | None = None
+    client: str = "single"
+    slo_us: float | None = None
 
     def __post_init__(self) -> None:
         if self.mode not in SERVE_MODES:
             raise PlanError(
                 f"serve mode must be one of {SERVE_MODES}, got {self.mode!r}"
+            )
+        if self.client not in SERVE_CLIENTS:
+            raise PlanError(
+                f"serve client must be one of {SERVE_CLIENTS}, got {self.client!r}"
             )
         if self.mode == "open" and self.qps <= 0:
             raise PlanError(f"open-loop serving needs qps > 0, got {self.qps}")
@@ -113,10 +132,18 @@ class ServeSpec:
             raise PlanError(f"serve lanes must be >= 1, got {self.lanes}")
         if self.duration_s <= 0:
             raise PlanError(f"serve duration_s must be > 0, got {self.duration_s}")
+        if self.slo_us is not None and self.slo_us <= 0:
+            raise PlanError(f"serve slo_us must be > 0, got {self.slo_us}")
         if self.colocate is not None and self.mode != "closed":
             raise PlanError(
                 "co-location is a closed-loop measurement; "
                 f"got colocate={self.colocate!r} with mode={self.mode!r}"
+            )
+        if self.colocate is not None and self.client != "single":
+            raise PlanError(
+                "co-location dispatch is single-threaded (tenants alternate "
+                f"submissions); got colocate={self.colocate!r} with "
+                f"client={self.client!r}"
             )
 
 

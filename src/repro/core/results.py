@@ -44,7 +44,9 @@ __all__ = [
 # v2: placement-aware rows — devices / placement / scaling_efficiency.
 # v3: serving rows — latency percentiles / achieved QPS / goodput /
 #     co-location slowdown; RunMetadata carries the ServeSpec.
-SCHEMA_VERSION = 3
+# v4: serving-client rows — serve_client (single|threaded), truncation
+#     honesty flag, dispatch_overhead_us, per-lane achieved QPS.
+SCHEMA_VERSION = 4
 
 
 class ReportError(ValueError):
@@ -70,7 +72,12 @@ class BenchmarkRecord:
     when the plan carried a :class:`~repro.core.plan.ServeSpec` (schema
     v3): latency percentiles over non-warmup requests, achieved QPS, and —
     for co-located runs — the partner's name and this row's p50 slowdown
-    vs its isolated baseline.
+    vs its isolated baseline. Schema v4 adds the client-side issue
+    accounting: ``serve_client`` (which host issue architecture served the
+    row), ``serve_truncated`` (the open-loop schedule hit its request cap,
+    so the run offered *less* than ``offered_qps``),
+    ``dispatch_overhead_us`` (mean host time per dispatch, threaded
+    client), and ``lane_qps`` (per-lane achieved QPS).
     """
 
     name: str
@@ -103,6 +110,12 @@ class BenchmarkRecord:
     goodput_qps: float | None = None
     serve_colocate: str | None = None
     slowdown_vs_isolated: float | None = None
+    # Serving-client columns (schema v4).
+    serve_client: str | None = None
+    serve_truncated: bool | None = None
+    serve_slo_us: float | None = None  # the SLO goodput was measured against
+    dispatch_overhead_us: float | None = None
+    lane_qps: list[float] | None = None  # list, not tuple: JSON round-trip
 
     def apply_serve(
         self,
@@ -110,6 +123,7 @@ class BenchmarkRecord:
         *,
         mode: str,
         lanes: int,
+        client: str = "single",
         colocate: str | None = None,
         slowdown: float | None = None,
     ) -> "BenchmarkRecord":
@@ -126,6 +140,13 @@ class BenchmarkRecord:
         self.goodput_qps = stats.goodput_qps
         self.serve_colocate = colocate
         self.slowdown_vs_isolated = slowdown
+        self.serve_client = client
+        self.serve_truncated = stats.truncated
+        self.serve_slo_us = stats.slo_us
+        self.dispatch_overhead_us = stats.dispatch_overhead_us
+        self.lane_qps = (
+            list(stats.lane_qps) if stats.lane_qps is not None else None
+        )
         return self
 
     @classmethod
@@ -137,6 +158,7 @@ class BenchmarkRecord:
         *,
         mode: str,
         lanes: int,
+        client: str = "single",
         name: str | None = None,
         colocate: str | None = None,
         slowdown: float | None = None,
@@ -163,7 +185,8 @@ class BenchmarkRecord:
             placement=placement,
         )
         return rec.apply_serve(
-            stats, mode=mode, lanes=lanes, colocate=colocate, slowdown=slowdown
+            stats, mode=mode, lanes=lanes, client=client,
+            colocate=colocate, slowdown=slowdown,
         )
 
     @classmethod
@@ -242,11 +265,26 @@ class BenchmarkRecord:
         )
         serve = ""
         if self.serve_mode is not None:
+            # Pre-v4 rows have no serve_client; they were served by the
+            # only client that existed then.
+            client = self.serve_client if self.serve_client else "single"
             serve = (
-                f";serve={self.serve_mode};lanes={self.serve_lanes};"
+                f";serve={self.serve_mode};client={client};"
+                f"lanes={self.serve_lanes};"
                 f"p50_us={self.latency_p50_us:.1f};"
                 f"p99_us={self.latency_p99_us:.1f};qps={self.achieved_qps:.1f}"
             )
+            if self.serve_truncated:
+                serve += ";truncated=1"
+            if self.serve_slo_us is not None:
+                # Goodput is only a distinct number under an SLO; emitting
+                # it SLO-less would just repeat qps.
+                serve += (
+                    f";slo_us={self.serve_slo_us:.0f};"
+                    f"goodput_qps={self.goodput_qps:.1f}"
+                )
+            if self.dispatch_overhead_us is not None:
+                serve += f";dispatch_us={self.dispatch_overhead_us:.1f}"
             if self.slowdown_vs_isolated is not None:
                 serve += (
                     f";colocate={self.serve_colocate};"

@@ -19,10 +19,14 @@ with ``scaling_efficiency`` on the multi-device rows.
 Serving flags: ``--serve {open,closed}`` runs every selected workload
 under generated load after measuring it (``--qps`` open-loop arrival rate,
 ``--concurrency`` closed-loop in-flight cap, ``--lanes`` dispatch lanes,
-``--serve-duration`` seconds); ``--colocate NAME`` serves each workload
-against a partner benchmark and records both tenants' slowdown vs their
-isolated baselines. ``--cache-dir`` persists lowered HLO text across
-processes so repeat runs skip retracing.
+``--serve-duration`` seconds); ``--serve-client {single,threaded}`` picks
+the host issue architecture (one thread for all lanes vs one issuing
+thread per lane, with dispatch-overhead and per-lane QPS columns);
+``--slo-us`` adds a latency SLO and the ``goodput_qps`` column;
+``--colocate NAME`` serves each workload against a partner benchmark and
+records both tenants' slowdown vs their isolated baselines.
+``--cache-dir`` persists lowered HLO text across processes so repeat runs
+skip retracing (verbose runs print its hit/fallback summary).
 """
 
 from __future__ import annotations
@@ -34,6 +38,7 @@ from typing import Any, Mapping, Sequence
 from repro.core.engine import Engine
 from repro.core.plan import (
     PLACEMENT_MODES,
+    SERVE_CLIENTS,
     SERVE_MODES,
     ExecutionPlan,
     Placement,
@@ -53,10 +58,24 @@ examples:
   # open-loop serving: pathfinder at 200 QPS through 4 lanes for 3 s
   python -m repro.core.suite --names pathfinder --serve open --qps 200 \\
       --lanes 4 --serve-duration 3
+  # threaded client: one issuing thread per lane, so host-side dispatch
+  # contention is measured (dispatch_us column) instead of hidden
+  python -m repro.core.suite --names gemm_f32_nn --serve closed \\
+      --concurrency 8 --lanes 4 --serve-client threaded
   # co-location interference: gemm and kmeans share the lanes; both rows
   # carry slowdown-vs-isolated
   python -m repro.core.suite --names gemm_f32_nn --serve closed \\
       --concurrency 8 --lanes 4 --colocate kmeans
+
+serving semantics:
+  open-loop rows report offered_qps (the target arrival rate); a schedule
+  cut short at its request cap additionally carries truncated=1, so the
+  row never claims a load it did not offer. --slo-us S adds goodput_qps,
+  the rate of completions with latency <= S microseconds (a request at
+  exactly the SLO counts as good); without an SLO, goodput == achieved.
+  The threaded client splits the arrival process into per-lane Poisson
+  sub-schedules from seeded child RNGs: the merged stream still offers
+  the target QPS and is deterministic for a fixed --seed.
 """
 
 
@@ -146,6 +165,8 @@ def _parse_serve(args) -> ServeSpec | None:
         "--concurrency": args.concurrency,
         "--lanes": args.lanes,
         "--serve-duration": args.serve_duration,
+        "--serve-client": args.serve_client,
+        "--slo-us": args.slo_us,
     }
     if args.serve is None and args.colocate is None:
         stray = [flag for flag, value in tuning.items() if value is not None]
@@ -169,6 +190,8 @@ def _parse_serve(args) -> ServeSpec | None:
             else spec.duration_s
         ),
         colocate=args.colocate,
+        client=args.serve_client if args.serve_client is not None else spec.client,
+        slo_us=args.slo_us,
     )
 
 
@@ -214,6 +237,15 @@ def main(argv: Sequence[str] | None = None) -> int:
     ap.add_argument("--serve-duration", type=float, default=None,
                     metavar="SECONDS",
                     help="serving duration per workload (default 2.0)")
+    ap.add_argument("--serve-client", choices=SERVE_CLIENTS, default=None,
+                    help="host issue architecture: 'single' dispatches "
+                         "every lane from one thread (default); 'threaded' "
+                         "gives each lane its own issuing thread and "
+                         "records dispatch overhead + per-lane QPS")
+    ap.add_argument("--slo-us", type=float, default=None, metavar="US",
+                    help="latency SLO in microseconds; rows gain "
+                         "goodput_qps (completions with latency <= SLO "
+                         "per second; latency == SLO counts as good)")
     ap.add_argument("--colocate", type=str, default=None, metavar="NAME",
                     help="co-locate every served workload with this "
                          "benchmark and record slowdown-vs-isolated "
@@ -228,8 +260,9 @@ def main(argv: Sequence[str] | None = None) -> int:
     ap.add_argument("--jsonl", type=str, default=None,
                     help="streaming JSONL report path (with run metadata)")
     args = ap.parse_args(argv)
+    engine = Engine(cache_dir=args.cache_dir) if args.cache_dir else None
     try:
-        records = _run_cli(args)
+        records = _run_cli(args, engine)
     except (PlanError, ValueError) as e:
         # Bad selection / placement / device count: a configuration error,
         # not a crash — exit 2 (the benchmarks/run.py --sections convention)
@@ -245,13 +278,17 @@ def main(argv: Sequence[str] | None = None) -> int:
         return 2
     for line in to_csv_lines(records):
         print(line)
+    if engine is not None and engine.disk_cache is not None:
+        # A disk cache that never hits is otherwise invisible from the
+        # CLI: always say what it did, and why warm loads fell back.
+        print(f"# {engine.disk_cache.summary()}", file=sys.stderr)
     errors = [r for r in records if r.status != "ok"]
     for r in errors:
         print(f"# ERROR {r.name}: {r.error}", file=sys.stderr)
     return 1 if errors else 0
 
 
-def _run_cli(args) -> list[BenchmarkRecord]:
+def _run_cli(args, engine: Engine | None = None) -> list[BenchmarkRecord]:
     return run_suite(
         levels=args.levels,
         names=args.names,
@@ -270,7 +307,7 @@ def _run_cli(args) -> list[BenchmarkRecord]:
         report_path=args.report,
         jsonl_path=args.jsonl,
         verbose=False,
-        engine=Engine(cache_dir=args.cache_dir) if args.cache_dir else None,
+        engine=engine,
     )
 
 

@@ -12,18 +12,36 @@ workload under generated load:
   work-queue analogue), with ``loop`` / ``lanes`` / ``batched`` dispatch
   modes generalizing the old feat_hyperq split.
 - :mod:`repro.serve.loadgen` — deterministic seeded load generation:
-  open-loop Poisson arrivals at a target QPS and closed-loop issue at a
-  fixed concurrency, with warmup exclusion.
+  open-loop Poisson arrivals at a target QPS (with an explicit
+  ``truncated`` flag when the schedule hits its request cap) and
+  closed-loop issue at a fixed concurrency, with warmup exclusion;
+  ``open_loop_lane_schedules`` splits one load into per-lane Poisson
+  sub-streams via seeded child RNGs whose merge still offers the target
+  QPS.
+- :mod:`repro.serve.client` — the host issue architectures: the
+  single-threaded client lives in ``lanes``; the thread-per-lane client
+  (``run_open_loop_threaded`` / ``run_closed_loop_threaded``) issues each
+  lane from its own thread through a thread-safe completion sink, with
+  per-lane dispatch-overhead accounting so host contention is measured.
 - :mod:`repro.serve.latency` — per-request latency capture folded into
-  p50/p95/p99/max percentiles, achieved QPS, and goodput.
+  p50/p95/p99/max percentiles, achieved QPS, goodput under an optional
+  SLO, per-lane achieved QPS, and the truncation honesty flag.
 - :mod:`repro.serve.interference` — co-locate workload pairs across split
   lanes and report the slowdown-vs-isolated matrix.
 
 The engine (``core/engine.py``) drives all of this as a ``serve`` stage
 after ``measure``, reusing the compile cache's executables — serving never
-recompiles what measuring already compiled.
+recompiles what measuring already compiled, whichever client issues it.
 """
 
+from repro.serve.client import (
+    SERVE_CLIENTS,
+    ClientResult,
+    CompletionSink,
+    LaneReport,
+    run_closed_loop_threaded,
+    run_open_loop_threaded,
+)
 from repro.serve.lanes import (
     DISPATCH_MODES,
     Completion,
@@ -34,21 +52,37 @@ from repro.serve.lanes import (
     serve_loop,
 )
 from repro.serve.latency import LatencyStats, stats_from_completions
-from repro.serve.loadgen import Request, closed_loop_schedule, open_loop_schedule
+from repro.serve.loadgen import (
+    Request,
+    Schedule,
+    closed_loop_schedule,
+    merge_schedules,
+    open_loop_lane_schedules,
+    open_loop_schedule,
+)
 from repro.serve.interference import ColocationResult, colocate_closed_loop
 
 __all__ = [
     "DISPATCH_MODES",
+    "SERVE_CLIENTS",
     "Completion",
     "DispatchLane",
     "LaneSet",
     "run_closed_loop",
     "run_open_loop",
     "serve_loop",
+    "ClientResult",
+    "CompletionSink",
+    "LaneReport",
+    "run_closed_loop_threaded",
+    "run_open_loop_threaded",
     "LatencyStats",
     "stats_from_completions",
     "Request",
+    "Schedule",
     "closed_loop_schedule",
+    "merge_schedules",
+    "open_loop_lane_schedules",
     "open_loop_schedule",
     "ColocationResult",
     "colocate_closed_loop",

@@ -119,9 +119,12 @@ def measure_colocation(
     n_lanes: int,
     duration_s: float,
     warmup: int = 0,
+    slo_us: float | None = None,
 ) -> ColocationResult:
     """Isolated baselines (same per-tenant lanes/slots as the co-located
-    run, so the only variable is the neighbour) + the co-located run."""
+    run, so the only variable is the neighbour) + the co-located run.
+    An SLO applies to both measurements, so each tenant's goodput is
+    comparable across isolation and co-location."""
     k = len(calls)
     per_lanes = max(1, n_lanes // k)
     per_conc = max(1, concurrency // k)
@@ -135,7 +138,8 @@ def measure_colocation(
                 n_lanes=per_lanes,
                 duration_s=duration_s,
                 warmup=warmup,
-            )
+            ),
+            slo_us=slo_us,
         )
         for name, call in calls.items()
     }
@@ -147,7 +151,8 @@ def measure_colocation(
         warmup=warmup,
     )
     colocated = {
-        name: stats_from_completions(comps) for name, comps in together.items()
+        name: stats_from_completions(comps, slo_us=slo_us)
+        for name, comps in together.items()
     }
     return ColocationResult(
         names=tuple(calls), isolated=isolated, colocated=colocated
@@ -161,6 +166,7 @@ def interference_matrix(
     n_lanes: int,
     duration_s: float,
     warmup: int = 0,
+    slo_us: float | None = None,
     pairs: Sequence[tuple[str, str]] | None = None,
 ) -> dict[tuple[str, str], ColocationResult]:
     """Pairwise co-location over ``calls`` (all unordered pairs by
@@ -178,5 +184,6 @@ def interference_matrix(
             n_lanes=n_lanes,
             duration_s=duration_s,
             warmup=warmup,
+            slo_us=slo_us,
         )
     return out

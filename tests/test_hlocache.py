@@ -73,6 +73,48 @@ def test_corrupt_cache_entry_falls_back_to_retrace(tmp_path):
     assert eng.disk_cache.stores == 1  # the retrace re-stored a good entry
 
 
+def test_fallbacks_are_counted_and_explained_not_silent(tmp_path, capsys):
+    """A present-but-unusable entry is a diagnosable *fallback* (counter +
+    reason, printed by verbose engine runs); a simply-absent entry is an
+    ordinary cold miss and records no reason."""
+    root = str(tmp_path / "hlo")
+    plan = ExecutionPlan(names=("pathfinder",), **FAST)
+
+    cold = Engine(cache_dir=root)
+    cold.run(plan)
+    assert cold.disk_cache.fallback_count == 0  # cold miss, no fallback
+    assert cold.disk_cache.last_fallback is None
+
+    version_dir = _version_dir(root)
+    for entry in os.listdir(version_dir):
+        with open(os.path.join(version_dir, entry), "w") as f:
+            f.write("{not json")
+
+    eng = Engine(cache_dir=root)
+    eng.run(plan, verbose=True)
+    dc = eng.disk_cache
+    assert dc.fallback_count == 1
+    assert dc.last_fallback is not None
+    assert "pathfinder" in dc.last_fallback  # which key fell back...
+    assert "JSONDecodeError" in dc.last_fallback  # ...and why
+    assert dc.fallback_reasons == [dc.last_fallback]
+    out = capsys.readouterr().out
+    assert "hlocache:" in out and "fallbacks=1" in out
+    assert "JSONDecodeError" in out
+
+
+def test_suite_cli_prints_cache_summary_with_cache_dir(tmp_path, capsys):
+    from repro.core.suite import main
+
+    rc = main([
+        "--names", "pathfinder", "--cache-dir", str(tmp_path / "hlo"),
+        "--iters", "1", "--warmup", "0", "--no-backward",
+    ])
+    assert rc == 0
+    err = capsys.readouterr().err
+    assert "hlocache:" in err and "stores=1" in err
+
+
 def test_disk_cache_skips_multi_device_entries(tmp_path):
     import subprocess
     import sys

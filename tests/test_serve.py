@@ -15,9 +15,19 @@ import textwrap
 import pytest
 
 from repro.core.plan import ExecutionPlan, PlanError, ServeSpec
+from repro.serve.client import (
+    run_closed_loop_threaded,
+    run_open_loop_threaded,
+)
 from repro.serve.lanes import Completion, DispatchLane, LaneSet, serve_loop
-from repro.serve.latency import stats_from_completions
-from repro.serve.loadgen import Request, closed_loop_schedule, open_loop_schedule
+from repro.serve.latency import LatencyStats, stats_from_completions
+from repro.serve.loadgen import (
+    Request,
+    closed_loop_schedule,
+    merge_schedules,
+    open_loop_lane_schedules,
+    open_loop_schedule,
+)
 
 _SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
@@ -57,6 +67,56 @@ def test_open_loop_schedule_validation():
         open_loop_schedule(qps=0, duration_s=1.0)
     with pytest.raises(ValueError, match="duration"):
         open_loop_schedule(qps=10, duration_s=0)
+    with pytest.raises(ValueError, match="n_lanes"):
+        open_loop_lane_schedules(qps=10, duration_s=1.0, n_lanes=0)
+
+
+def test_open_loop_truncation_flag():
+    """Hitting max_requests is flagged, not silent: the schedule offered
+    less than the target and downstream stats must be able to say so."""
+    full = open_loop_schedule(qps=1000.0, duration_s=10.0, max_requests=50)
+    assert len(full) == 50 and full.truncated
+    untruncated = open_loop_schedule(qps=100.0, duration_s=0.5)
+    assert not untruncated.truncated
+    assert untruncated.offered_qps == 100.0
+    # Lane splitting caps the *merged* count; every lane reports it.
+    lanes = open_loop_lane_schedules(
+        qps=1000.0, duration_s=10.0, n_lanes=4, max_requests=64
+    )
+    assert sum(len(l) for l in lanes) == 64
+    assert all(l.truncated for l in lanes)
+    assert merge_schedules(lanes).truncated
+
+
+def test_lane_schedules_deterministic_and_merge_to_target_stream():
+    """Acceptance: identical seeds give identical per-lane sub-schedules
+    AND an identical merged arrival stream; the merge is a well-formed
+    request sequence (sorted arrivals, dense indices, warmup prefix) at
+    the summed target rate."""
+    kw = dict(qps=400.0, duration_s=0.5, n_lanes=4, warmup=5)
+    a = open_loop_lane_schedules(seed=7, **kw)
+    b = open_loop_lane_schedules(seed=7, **kw)
+    assert a == b  # bit-identical, lane by lane
+    assert merge_schedules(a) == merge_schedules(b)
+    assert a != open_loop_lane_schedules(seed=8, **kw)
+
+    merged = merge_schedules(a)
+    assert merged.offered_qps == pytest.approx(400.0)
+    assert [r.index for r in merged] == list(range(len(merged)))
+    arrivals = [r.arrival_s for r in merged]
+    assert arrivals == sorted(arrivals)
+    assert all(0 < t < 0.5 for t in arrivals)
+    assert [r.warmup for r in merged[:5]] == [True] * 5
+    assert not any(r.warmup for r in merged[5:])
+    # Each lane owns its share at qps / n_lanes, in arrival order.
+    for lane in a:
+        assert lane.offered_qps == pytest.approx(100.0)
+        lane_arrivals = [r.arrival_s for r in lane]
+        assert lane_arrivals == sorted(lane_arrivals)
+    merged_again = sorted(
+        (r for lane in a for r in lane), key=lambda r: r.index
+    )
+    assert tuple(merged_again) == merged.requests
 
 
 def test_closed_loop_schedule_marks_warmup_prefix():
@@ -121,11 +181,89 @@ def test_latency_stats_goodput_under_slo():
     comps = [_completion(i, 0.0, 0.001 if i < 80 else 1.0) for i in range(100)]
     stats = stats_from_completions(comps, slo_us=10_000)
     assert stats.goodput_qps == pytest.approx(stats.achieved_qps * 0.8)
+    assert stats.slo_us == 10_000
+
+
+def test_latency_stats_slo_boundary_counts_as_good():
+    """lat == slo_us is good (<=, not <): an SLO names the worst latency
+    still acceptable."""
+    comps = [_completion(i, 0.0, 0.010) for i in range(10)]  # exactly 10ms
+    stats = stats_from_completions(comps, slo_us=10_000.0)
+    assert stats.goodput_qps == pytest.approx(stats.achieved_qps)
+    # One microsecond under the SLO and everything misses it.
+    stats = stats_from_completions(comps, slo_us=9_999.0)
+    assert stats.goodput_qps == 0.0
+
+
+def test_latency_stats_single_completion_percentiles():
+    (lat_s,) = (0.005,)
+    stats = stats_from_completions([_completion(0, 1.0, lat_s)])
+    assert stats.requests == 1
+    assert stats.warmup_requests == 0
+    expected_us = lat_s * 1e6
+    assert stats.p50_us == pytest.approx(expected_us)
+    assert stats.p95_us == pytest.approx(expected_us)
+    assert stats.p99_us == pytest.approx(expected_us)
+    assert stats.max_us == pytest.approx(expected_us)
+    assert stats.lane_qps == (stats.achieved_qps,)
 
 
 def test_latency_stats_require_measured_completions():
-    with pytest.raises(ValueError, match="warmup"):
-        stats_from_completions([_completion(0, 0.0, 1.0, warmup=True)])
+    with pytest.raises(
+        ValueError, match=r"no measured completions \(3 warmup-only\)"
+    ):
+        stats_from_completions(
+            [_completion(i, 0.0, 1.0, warmup=True) for i in range(3)]
+        )
+
+
+def _stats(**kw) -> LatencyStats:
+    base = dict(
+        requests=10, warmup_requests=0, p50_us=100.0, p95_us=150.0,
+        p99_us=190.0, max_us=200.0, achieved_qps=50.0, goodput_qps=40.0,
+    )
+    base.update(kw)
+    return LatencyStats(**base)
+
+
+def test_derived_emits_offered_qps_even_when_zero():
+    """The falsy-zero bug: `if self.offered_qps` dropped a 0.0 target;
+    the check must be `is not None`."""
+    assert "offered_qps=0.0" in _stats(offered_qps=0.0).derived()
+    assert "offered_qps=250.0" in _stats(offered_qps=250.0).derived()
+    assert "offered_qps" not in _stats(offered_qps=None).derived()
+
+
+def test_derived_emits_goodput_when_slo_set_and_truncation_flag():
+    d = _stats(slo_us=500.0, truncated=True).derived()
+    assert "goodput_qps=40.0" in d
+    assert "truncated=1" in d
+    d = _stats().derived()  # no SLO, not truncated
+    assert "goodput_qps" not in d
+    assert "truncated" not in d
+
+
+def test_latency_stats_per_lane_qps_split():
+    comps = [
+        dataclasses.replace(_completion(i, i * 0.01, 0.001), lane=i % 2)
+        for i in range(20)
+    ]
+    stats = stats_from_completions(comps)
+    assert stats.lane_qps is not None and len(stats.lane_qps) == 2
+    assert all(q > 0 for q in stats.lane_qps)
+
+
+def test_lane_qps_zero_fills_starved_lanes():
+    """A lane with no measured completions reads 0.0 at its own index —
+    it must not vanish and shift every later lane's attribution."""
+    comps = [
+        dataclasses.replace(_completion(i, 0.0, 0.001), lane=2)
+        for i in range(5)
+    ]
+    stats = stats_from_completions(comps, n_lanes=4)
+    assert len(stats.lane_qps) == 4
+    assert stats.lane_qps[0] == stats.lane_qps[1] == stats.lane_qps[3] == 0.0
+    assert stats.lane_qps[2] > 0
 
 
 # -- ServeSpec / plan ------------------------------------------------------
@@ -144,8 +282,91 @@ def test_servespec_validation():
         ServeSpec(duration_s=0)
     with pytest.raises(PlanError, match="closed-loop"):
         ServeSpec(mode="open", qps=10, colocate="gemm_f32_nn")
+    with pytest.raises(PlanError, match="client"):
+        ServeSpec(client="bogus")
+    with pytest.raises(PlanError, match="slo_us"):
+        ServeSpec(slo_us=0)
+    with pytest.raises(PlanError, match="single-threaded"):
+        ServeSpec(colocate="gemm_f32_nn", client="threaded")
     with pytest.raises(PlanError, match="ServeSpec"):
         ExecutionPlan(serve="closed")
+
+
+# -- threaded client -------------------------------------------------------
+
+
+def _jit_call():
+    import jax
+    import jax.numpy as jnp
+
+    x = jnp.ones((64, 64))
+    f = jax.jit(lambda x: jnp.tanh(x @ x).sum())
+    jax.block_until_ready(f(x))
+    return lambda: f(x)
+
+
+def test_threaded_closed_loop_serves_and_accounts_per_lane():
+    call = _jit_call()
+    result = run_closed_loop_threaded(
+        call, concurrency=4, n_lanes=2, duration_s=0.15, warmup=4
+    )
+    assert len(result.lane_reports) == 2
+    assert {r.lane for r in result.lane_reports} == {0, 1}
+    for report in result.lane_reports:
+        assert report.requests > 0
+        assert report.dispatch_overhead_us > 0
+        assert report.achieved_qps > 0
+    assert result.dispatch_overhead_us > 0
+    stats = stats_from_completions(result.completions)
+    assert stats.requests > 0
+    # Striped indices: globally unique across the lanes' threads.
+    indices = [c.index for c in result.completions]
+    assert len(indices) == len(set(indices))
+
+
+def test_threaded_closed_loop_respects_max_requests():
+    call = _jit_call()
+    # n_lanes does not divide max_requests: the cap must still be exact
+    # (pre-split across lanes), not ceil-rounded per lane.
+    result = run_closed_loop_threaded(
+        call, concurrency=3, n_lanes=3, duration_s=5.0, warmup=0,
+        max_requests=10,
+    )
+    assert len(result.completions) == 10
+
+
+def test_threaded_open_loop_follows_lane_schedules():
+    call = _jit_call()
+    schedules = open_loop_lane_schedules(
+        qps=400.0, duration_s=0.25, n_lanes=2, seed=3, warmup=4
+    )
+    result = run_open_loop_threaded(call, schedules, concurrency=8)
+    issued = sum(len(s) for s in schedules)
+    assert len(result.completions) == issued
+    # Every scheduled request completed exactly once, on its own lane.
+    by_index = {c.index: c for c in result.completions}
+    assert len(by_index) == issued
+    for lane, schedule in enumerate(schedules):
+        for req in schedule:
+            assert by_index[req.index].lane == lane
+            assert by_index[req.index].warmup == req.warmup
+    stats = stats_from_completions(
+        result.completions, dispatch_overhead_us=result.dispatch_overhead_us
+    )
+    assert stats.dispatch_overhead_us is not None
+    assert stats.dispatch_overhead_us > 0
+
+
+def test_threaded_worker_error_propagates():
+    boom = RuntimeError("lane exploded")
+
+    def call():
+        raise boom
+
+    with pytest.raises(RuntimeError, match="lane exploded"):
+        run_closed_loop_threaded(
+            call, concurrency=2, n_lanes=2, duration_s=0.5
+        )
 
 
 # -- engine serve stage ----------------------------------------------------
@@ -207,6 +428,71 @@ def test_open_loop_serve_records_offered_qps():
     assert rec.serve_mode == "open"
     assert rec.offered_qps == pytest.approx(300.0)
     assert rec.achieved_qps > 0
+    assert rec.serve_client == "single"
+    assert rec.serve_truncated is False
+
+
+def test_threaded_client_records_dispatch_columns_and_reuses_cache():
+    """The threaded client serves the same cached executable the measure
+    stage compiled (client is not part of the compile key), and its rows
+    carry the schema-v4 issue-accounting columns."""
+    from repro.core.engine import Engine
+
+    eng = Engine()
+    plan = ExecutionPlan(names=("pathfinder",), serve=TINY_SERVE, **FAST)
+    eng.run(plan)
+    misses = eng.cache.misses
+    threaded = dataclasses.replace(
+        plan, serve=dataclasses.replace(TINY_SERVE, client="threaded")
+    )
+    res = eng.run(threaded)
+    assert eng.cache.misses == misses  # both clients share one executable
+    (rec,) = res.records
+    assert rec.status == "ok", rec.error
+    assert rec.serve_client == "threaded"
+    assert rec.dispatch_overhead_us is not None
+    assert rec.dispatch_overhead_us > 0
+    assert rec.lane_qps is not None and len(rec.lane_qps) == TINY_SERVE.lanes
+    assert all(q > 0 for q in rec.lane_qps)
+    assert "client=threaded" in rec.csv() and "dispatch_us=" in rec.csv()
+
+
+def test_open_loop_truncation_surfaces_in_record():
+    """An open-loop serve whose schedule hit its cap reports truncated=1
+    instead of claiming the full offered load (both clients)."""
+    from repro.core.engine import Engine
+    from repro.serve import loadgen
+
+    real_schedule = loadgen.open_loop_schedule
+    real_lanes = loadgen.open_loop_lane_schedules
+
+    def capped_schedule(**kw):
+        kw["max_requests"] = 10
+        return real_schedule(**kw)
+
+    def capped_lanes(**kw):
+        kw["max_requests"] = 10
+        return real_lanes(**kw)
+
+    spec = ServeSpec(mode="open", qps=5000.0, lanes=2, duration_s=0.5)
+    loadgen.open_loop_schedule = capped_schedule
+    loadgen.open_loop_lane_schedules = capped_lanes
+    try:
+        for client in ("single", "threaded"):
+            res = Engine().run(
+                ExecutionPlan(
+                    names=("pathfinder",),
+                    serve=dataclasses.replace(spec, client=client),
+                    **FAST,
+                )
+            )
+            (rec,) = res.records
+            assert rec.status == "ok", rec.error
+            assert rec.serve_truncated is True, client
+            assert "truncated=1" in rec.csv()
+    finally:
+        loadgen.open_loop_schedule = real_schedule
+        loadgen.open_loop_lane_schedules = real_lanes
 
 
 def test_colocated_serve_records_slowdown_for_both_workloads():
@@ -244,6 +530,23 @@ def test_unknown_colocate_name_is_a_plan_error():
                 **FAST,
             )
         )
+
+
+def test_csv_on_pre_v4_serve_rows_reads_client_single():
+    """Re-serializing a schema-v3 record (no serve_client key) must not
+    print the literal 'client=None' — those rows were served by the only
+    client that existed then."""
+    from repro.core.results import BenchmarkRecord
+
+    rec = BenchmarkRecord(
+        name="x", level=1, dwarf=None, domain=None, preset=0,
+        us_per_call=1.0, achieved_gflops=0.0, achieved_gbps=0.0,
+        compute_util10=0, memory_util10=0, dominant="serve",
+        serve_mode="closed", serve_lanes=2, latency_p50_us=10.0,
+        latency_p99_us=20.0, achieved_qps=5.0,
+    )
+    assert "client=single" in rec.csv()
+    assert "None" not in rec.csv()
 
 
 def test_jsonl_roundtrips_serve_columns_and_metadata(tmp_path):
@@ -305,6 +608,61 @@ def test_suite_cli_rejects_serve_tuning_flags_without_serve_mode(capsys):
     assert rc == 2
     err = capsys.readouterr().err
     assert "--lanes" in err and "--qps" in err and "--serve" in err
+
+
+def test_suite_cli_stray_serve_client_flag_is_config_error(capsys):
+    from repro.core.suite import main
+
+    rc = main(["--names", "pathfinder", "--serve-client", "threaded"])
+    assert rc == 2
+    assert "--serve-client" in capsys.readouterr().err
+
+
+def test_suite_cli_threaded_client_end_to_end(capsys):
+    from repro.core.suite import main
+
+    rc = main([
+        "--names", "pathfinder", "--serve", "closed", "--concurrency", "4",
+        "--lanes", "2", "--serve-duration", "0.2", "--serve-client",
+        "threaded", "--iters", "1", "--warmup", "0", "--no-backward",
+    ])
+    assert rc == 0
+    out = capsys.readouterr().out
+    assert "client=threaded" in out and "dispatch_us=" in out
+
+
+def test_suite_cli_slo_flag_accepted_with_serve(capsys):
+    from repro.core.suite import main
+
+    rc = main([
+        "--names", "pathfinder", "--serve", "open", "--qps", "200",
+        "--lanes", "2", "--serve-duration", "0.2", "--slo-us", "1e9",
+        "--iters", "1", "--warmup", "0", "--no-backward",
+    ])
+    assert rc == 0
+    out = capsys.readouterr().out
+    # The SLO must be observable in the primary CSV output, not only in
+    # JSONL reports.
+    assert "serve=open" in out
+    assert "slo_us=1000000000" in out and "goodput_qps=" in out
+
+
+def test_colocation_applies_slo_to_both_measurements():
+    """slo_us reaches the isolated baselines AND the co-located run — an
+    unsatisfiable SLO zeroes goodput everywhere, never silently reverting
+    to goodput == achieved."""
+    from repro.serve.interference import measure_colocation
+
+    calls = {"f": _jit_call(), "g": _jit_call()}
+    result = measure_colocation(
+        calls, concurrency=2, n_lanes=2, duration_s=0.1, warmup=2,
+        slo_us=1e-3,  # sub-nanosecond SLO: nothing can be good
+    )
+    for name in calls:
+        assert result.isolated[name].goodput_qps == 0.0
+        assert result.colocated[name].goodput_qps == 0.0
+        assert result.colocated[name].slo_us == 1e-3
+        assert result.colocated[name].achieved_qps > 0
 
 
 def test_interference_matrix_covers_all_pairs():

@@ -6,10 +6,12 @@
 # devices and drive a sharded device-scaling sweep, asserting zero
 # status=error records and populated scaling_efficiency columns.
 #
-# With --serve, instead run the serving smoke on forced host devices: a
-# tiny closed-loop serve (2 lanes, ~2 s) asserting schema-v3 latency/QPS
-# columns, plus one co-location pair asserting slowdown-vs-isolated on
-# both tenants' rows.
+# With --serve [CLIENT], instead run the serving smoke on forced host
+# devices with that serving client (single|threaded, default single): a
+# tiny closed-loop serve (2 lanes, ~2 s) asserting schema-v4 latency/QPS
+# columns (threaded runs additionally assert the dispatch-overhead and
+# per-lane QPS accounting), plus — for the single client — one
+# co-location pair asserting slowdown-vs-isolated on both tenants' rows.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -51,39 +53,56 @@ PY
 fi
 
 if [[ "${1:-}" == "--serve" ]]; then
+  client="${2:-single}"
   export XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}"
 
   python -m repro.core.suite \
     --names pathfinder --preset 0 --iters 1 --warmup 0 --no-backward \
     --serve closed --concurrency 4 --lanes 2 --serve-duration 2 \
-    --jsonl "$out/serve.jsonl"
+    --serve-client "$client" --jsonl "$out/serve.jsonl"
 
-  python -m repro.core.suite \
-    --names pathfinder --preset 0 --iters 1 --warmup 0 --no-backward \
-    --serve closed --concurrency 4 --lanes 2 --serve-duration 1 \
-    --colocate gemm_f32_nn --jsonl "$out/colocate.jsonl"
-
-  python - "$out/serve.jsonl" "$out/colocate.jsonl" <<'PY'
+  python - "$out/serve.jsonl" "$client" <<'PY'
 import sys
 
 from repro.core.results import load_run
 
 meta, records = load_run(sys.argv[1])
-assert meta is not None and meta.schema_version >= 3, meta
+client = sys.argv[2]
+assert meta is not None and meta.schema_version >= 4, meta
 assert meta.serve is not None and meta.serve.mode == "closed", meta.serve
+assert meta.serve.client == client, meta.serve
 bad = [r for r in records if r.status != "ok"]
 for r in bad:
     print(f"ERROR {r.name}: {r.error}", file=sys.stderr)
 assert not bad, f"{len(bad)} error records in the serve smoke"
 (rec,) = records
 assert rec.serve_mode == "closed" and rec.serve_lanes == 2, rec
+assert rec.serve_client == client, rec.serve_client
 assert rec.latency_p50_us and rec.latency_p95_us and rec.latency_p99_us
 assert rec.latency_p50_us <= rec.latency_p99_us <= rec.latency_max_us
 assert rec.achieved_qps and rec.achieved_qps > 0, rec
-print(f"serve smoke: {rec.name} p50={rec.latency_p50_us:.0f}us "
-      f"p99={rec.latency_p99_us:.0f}us qps={rec.achieved_qps:.0f}")
+assert rec.serve_truncated is False, rec.serve_truncated
+assert rec.lane_qps and len(rec.lane_qps) == 2, rec.lane_qps
+if client == "threaded":
+    assert rec.dispatch_overhead_us and rec.dispatch_overhead_us > 0, rec
+print(f"serve smoke [{client}]: {rec.name} p50={rec.latency_p50_us:.0f}us "
+      f"p99={rec.latency_p99_us:.0f}us qps={rec.achieved_qps:.0f} "
+      f"lane_qps={[round(q) for q in rec.lane_qps]}")
+PY
 
-meta, records = load_run(sys.argv[2])
+  # Co-location rides the single-threaded dispatch path by design.
+  if [[ "$client" == "single" ]]; then
+    python -m repro.core.suite \
+      --names pathfinder --preset 0 --iters 1 --warmup 0 --no-backward \
+      --serve closed --concurrency 4 --lanes 2 --serve-duration 1 \
+      --colocate gemm_f32_nn --jsonl "$out/colocate.jsonl"
+
+    python - "$out/colocate.jsonl" <<'PY'
+import sys
+
+from repro.core.results import load_run
+
+meta, records = load_run(sys.argv[1])
 assert meta.serve is not None and meta.serve.colocate == "gemm_f32_nn"
 bad = [r for r in records if r.status != "ok"]
 for r in bad:
@@ -98,6 +117,7 @@ for r in records:
 print("co-location smoke: slowdowns "
       + ", ".join(f"{r.name}={r.slowdown_vs_isolated:.2f}" for r in records))
 PY
+  fi
   exit 0
 fi
 
