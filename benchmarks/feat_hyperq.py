@@ -6,6 +6,10 @@ route through the serving subsystem's dispatch modes (``repro.serve``):
 
 - **loop** (``serve.lanes.serve_loop``): N jitted calls synchronized one
   by one — the no-concurrency baseline;
+- **windowed loop** (``serve_loop(..., window=N)``): the same N calls
+  dispatched back to back with one synchronization on all of them — the
+  async-dispatch floor; loop_us − windowed_us is the per-call
+  dispatch + sync overhead the serial loop folds into its number;
 - **batched** (``serve.lanes.batched_call``): N instances fused into one
   program, filling idle vector lanes the way HyperQ fills idle work
   queues; speedup = loop_us / batched_us — >1 means one instance
@@ -56,14 +60,23 @@ def rows(rows_grid: int = 64, cols: int = 256) -> list[Row]:
         stats = stats_from_completions(completions)
         us_loop = n * 1e6 / stats.achieved_qps  # per N-instance sweep
 
-        # (b) batched dispatch: the same N instances as one program.
+        # (b) windowed loop: same N calls, one synchronization per sweep —
+        # the async-dispatch floor (loop − windowed = dispatch overhead).
+        win_completions = serve_loop(
+            call, closed_loop_schedule(7 * n, warmup=2 * n), window=n
+        )
+        win_stats = stats_from_completions(win_completions)
+        us_windowed = n * 1e6 / win_stats.achieved_qps
+
+        # (c) batched dispatch: the same N instances as one program.
         fn = jax.jit(batched_call(pathfinder_min_path, n))
         us_batch, _ = time_fn(fn, (grids,), iters=5, warmup=2)
         out.append(
             (
                 f"feat_hyperq.n{n}",
                 us_batch,
-                f"instances={n};loop_us={us_loop:.1f};batched_us={us_batch:.1f};"
+                f"instances={n};loop_us={us_loop:.1f};"
+                f"windowed_us={us_windowed:.1f};batched_us={us_batch:.1f};"
                 f"batching_speedup={us_loop / max(us_batch, 1e-9):.2f}",
             )
         )

@@ -90,7 +90,8 @@ def main(argv=None) -> int:
         "feat_coop_groups": feat_coop_groups.rows,
         "feat_dynamic_parallelism": feat_dynamic_parallelism.rows,
         "roofline": lambda: roofline_table.rows("single")
-        + roofline_table.rows("multi"),
+        + roofline_table.rows("multi")
+        + roofline_table.rows_from_latest_report(),
     }
     # SECTION_NAMES exists so --sections validates before the jax imports
     # above; keep the two in sync.

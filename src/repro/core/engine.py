@@ -10,14 +10,22 @@ declarative half). For every selected benchmark the engine runs the stages:
   data mesh (``runtime/sharding``): ``replicate`` device_puts every input
   on all devices; ``shard`` partitions inputs along the workload's
   declared ``batch_dims`` (non-batchable workloads fall back to replicate
-  and the record says so). Single-device runs skip placement entirely.
+  and the record says so). Single-device runs pre-commit host-side inputs
+  with ``harness.commit_args`` — one ``device_put`` before any loop, so
+  neither the timer nor the serve stage ever pays per-call H2D transfer
+  (``no_jit`` host-transfer workloads opt out: staging *is* their
+  measurement).
 - **compile**: lower + compile through an in-process cache keyed on
   ``(name, preset, overrides, backward, backend, devices, placement)`` so
   each workload is compiled **exactly once per (pass, placement)** — the
   sharded and replicated lowerings are distinct executables, and the same
   executable feeds both the timer and the static analysis.
 - **measure**: validate the first output, then time the compiled
-  executable (``harness.time_fn``).
+  executable (``harness.time_fn``) in sync mode (``us_per_call``, the
+  comparable number) and — when ``plan.timing_window > 1`` — in windowed
+  mode (``us_per_call_windowed``: K calls in flight per synchronization,
+  riding async dispatch; the difference is the derived per-call dispatch
+  overhead).
 - **characterize**: static cost/memory/roofline analysis of the cached
   executable, computed once and memoized alongside it.
 - **serve** (only when the plan carries a
@@ -54,6 +62,7 @@ engine).
 from __future__ import annotations
 
 import dataclasses
+import os
 from typing import Any, Callable
 
 import jax
@@ -61,6 +70,7 @@ import jax
 from repro.core.harness import (
     CompiledInfo,
     characterize_compiled,
+    commit_args,
     empty_compiled_info,
     time_fn,
     timing_from_stats,
@@ -156,10 +166,13 @@ class Engine:
         cache_dir: str | None = None,
     ) -> None:
         self.cache = cache if cache is not None else CompileCache()
-        # Optional cross-process persistence of lowered HLO text (ROADMAP
-        # open item, scoped to lowering text): warm entries skip retracing
-        # by compiling the stored text directly. None = in-process only.
+        # Optional cross-process persistence of compile artifacts (two
+        # tiers: serialized executables over lowered HLO text) — warm
+        # entries skip retracing, and usually XLA compilation too. None =
+        # in-process only.
         self.disk_cache = HloDiskCache(cache_dir) if cache_dir else None
+        if cache_dir:
+            _enable_jax_persistent_cache(cache_dir)
 
     # -- stages ------------------------------------------------------------
 
@@ -209,9 +222,13 @@ class Engine:
         self, workload: Workload, args: tuple, requested: Placement
     ) -> tuple[tuple, Placement]:
         """Put inputs where the placement says; the effective placement
-        joins the compile-cache key."""
+        joins the compile-cache key. Single-device placement means
+        committing host-side inputs once (numpy arrays from make_inputs
+        would otherwise pay H2D on *every* timed and served call)."""
         placement = self._resolve_placement(workload, args, requested)
         if placement.devices == 1:
+            if not workload.meta.get("no_jit"):
+                args = commit_args(args)
             return args, placement
         from repro.runtime.sharding import data_mesh, place_args
 
@@ -244,9 +261,18 @@ class Engine:
                     info=empty_compiled_info(_pass_name(workload, backward)),
                 )
             # Disk cache (single-device entries only: multi-device lowerings
-            # embed placement-dependent shardings): a warm entry skips the
-            # retrace, a cold or failed one falls through to it.
+            # embed placement-dependent shardings and device assignments):
+            # a warm entry skips the retrace — and, when the serialized
+            # executable deserializes, the XLA compile too; a cold or
+            # failed one falls through. Multi-device skips are *recorded*
+            # in the cache diagnostics, not silently dropped.
             use_disk = self.disk_cache is not None and placement.devices == 1
+            if self.disk_cache is not None and placement.devices > 1:
+                self.disk_cache.note_skip(
+                    key,
+                    f"multi-device placement ({placement.devices}x"
+                    f"{placement.mode}): lowering embeds device assignment",
+                )
             if use_disk:
                 loaded = self.disk_cache.load(key, args)
                 if loaded is not None:
@@ -276,8 +302,20 @@ class Engine:
         mean, stdev = time_fn(
             entry.executable, args, iters=plan.iters, warmup=plan.warmup
         )
+        windowed_us = None
+        window = plan.timing_window
+        if window > 1 and not workload.meta.get("no_jit"):
+            # Windowed mode rides async dispatch; the sync loop above
+            # already warmed the executable, so no second warmup. no_jit
+            # host-transfer workloads run synchronously by construction —
+            # a windowed number for them would be the sync number with
+            # extra noise, so their windowed columns stay empty.
+            windowed_us, _ = time_fn(
+                entry.executable, args, iters=plan.iters, warmup=0, window=window
+            )
         return timing_from_stats(
-            workload, mean_us=mean, stdev_us=stdev, iters=plan.iters, backward=backward
+            workload, mean_us=mean, stdev_us=stdev, iters=plan.iters,
+            backward=backward, windowed_us=windowed_us, window=window,
         )
 
     def _stage_characterize(
@@ -517,6 +555,7 @@ class Engine:
             placement=plan.placement.mode,
             device_sweep=plan.device_sweep,
             serve=plan.serve,
+            timing_window=plan.timing_window,
         )
         writer = JsonlReportWriter(jsonl_path, metadata) if jsonl_path else None
         records: list[BenchmarkRecord] = []
@@ -650,6 +689,25 @@ class Engine:
                     devices=placement.devices, placement=placement.mode,
                 )
             ]
+
+
+def _enable_jax_persistent_cache(cache_dir: str) -> None:
+    """Point jax's own persistent compilation cache at a subdirectory of
+    the engine's cache dir. The two-tier artifact cache covers the
+    benchmark executables; this covers everything *around* them — input
+    builders, validators, one-off jnp ops — which otherwise re-compile in
+    every process and dominate warm-run wall time. Best-effort and
+    process-global (last cache_dir wins): older jaxlibs without CPU
+    support simply skip it."""
+    try:
+        jax.config.update(
+            "jax_compilation_cache_dir",
+            os.path.join(cache_dir, "jax-persistent"),
+        )
+        jax.config.update("jax_persistent_cache_min_compile_time_secs", 0.0)
+        jax.config.update("jax_persistent_cache_min_entry_size_bytes", 0)
+    except Exception:  # noqa: BLE001 — an accelerator, never a failure
+        pass
 
 
 def _pass_name(workload: Workload, backward: bool) -> str:

@@ -1,39 +1,56 @@
-"""Cross-process persistence of lowered HLO text (the ROADMAP open item,
-scoped to lowering text — *not* serialized executables).
+"""Cross-process persistence of compile artifacts — a two-tier cache that
+closes the ROADMAP's "serialized executables" open item.
 
 The in-process :class:`~repro.core.engine.CompileCache` dies with the
-process, so every CI suite run re-traces and re-lowers every workload.
-This cache persists, per compile-cache key, exactly what the lowering
-produced: the StableHLO module text plus the static characterization
-(cost / memory / collective bytes) computed from the compiled artifact.
-A warm run skips Python retracing entirely — the stored text is handed
-straight to the backend compiler (``client.compile``), and the stored
-characterization rebuilds :class:`~repro.core.harness.CompiledInfo`
-without touching the executable.
+process, so every CI suite run re-pays tracing *and* XLA compilation for
+every workload. This cache persists, per compile-cache key, **two tiers**
+of what the compile stage produced, plus the static characterization
+(cost / memory / collective bytes) that rebuilds
+:class:`~repro.core.harness.CompiledInfo` without touching an executable:
 
-Entries are versioned by ``jax.__version__``, backend, and a content hash
-of the ``repro`` package source (a new toolchain *or an edited kernel*
-gets a fresh directory rather than stale lowerings), keyed by a hash of
-the engine's compile-cache key, and scoped to **single-device** entries:
-multi-device lowerings embed placement-dependent shardings and always
-retrace.
+- **Tier 1 — serialized executable** (``<key>.exe``): the AOT-serialized
+  compiled executable (``backend.serialize_executable``). A warm load
+  deserializes it straight into a runnable — *zero* retracing and *zero*
+  XLA compilation. This is what makes a warm ``--cache-dir`` suite run a
+  zero-compile run.
+- **Tier 2 — lowered HLO text** (``<key>.json``): the StableHLO module
+  text. A warm load hands it to the backend compiler (``client.compile``)
+  — it still pays one XLA compilation but skips Python retracing. This is
+  the fallback when the executable blob is missing or no longer
+  deserializes (toolchain drift).
+
+Entries are versioned by ``jax.__version__``, ``jaxlib.__version__``, the
+backend, a topology token (device kind × device count — a serialized
+executable is compiled *for* a device), and a content hash of the
+``repro`` package source (a new toolchain *or an edited kernel* gets a
+fresh directory rather than stale artifacts), keyed by a hash of the
+engine's compile-cache key. Entries are scoped to **single-device**
+placements: multi-device lowerings embed placement-dependent shardings
+and device assignments, so the engine *skips* the disk cache for them —
+and the skip is counted and named (``skips`` / ``skip_reasons``) rather
+than silent, so a sweep whose multi-device steps never hit is diagnosable
+from ``summary()``.
 
 Every warm load is validated by one trial execution; *any* failure —
-corrupt file, toolchain drift, call-convention mismatch — falls back to
-the normal trace-and-compile path. The cache can only ever make a run
-faster, never wronger. Fallbacks are *counted and explained* rather than
-swallowed: ``fallback_count`` / ``fallback_reasons`` / ``last_fallback``
-record why each present-but-unusable entry was rejected (a missing file
-is an ordinary cold miss, not a fallback), and ``summary()`` is the
-one-line diagnosis the engine prints in verbose runs — so a cache that
-never hits is diagnosable instead of invisible.
+corrupt file, toolchain drift, call-convention mismatch — degrades one
+tier at a time: executable → HLO text → the normal trace-and-compile
+path. The cache can only ever make a run faster, never wronger.
+Degradations are *counted and explained* rather than swallowed:
+``exe_fallbacks`` / ``last_exe_fallback`` record executables that no
+longer deserialize (the run then pays one compile from tier 2), and
+``fallback_count`` / ``fallback_reasons`` / ``last_fallback`` record
+entries that fell all the way back to retracing. ``xla_compiles`` counts
+the compilations the cache itself triggered (tier-2 loads), so "the warm
+run performed zero XLA compiles" is an assertable counter:
+``exe_hits == lookups`` with ``hlo_hits == misses == fallbacks == 0``.
+``summary()`` is the one-line diagnosis the engine prints in verbose runs.
 
-Caveat: warm entries execute through the backend client's raw
-call convention rather than ``jax.jit``'s dispatch path, which adds a few
+Caveat: warm entries execute through the backend client's raw call
+convention rather than ``jax.jit``'s dispatch path, which adds a few
 hundred microseconds of host overhead per call. This cache is a CI /
 repeat-run accelerator (where wall-clock is dominated by tracing and
 compilation); runs whose *measured microseconds* are the artifact should
-stay cold.
+stay cold — or read the windowed column, which amortizes dispatch.
 """
 
 from __future__ import annotations
@@ -42,6 +59,7 @@ import dataclasses
 import hashlib
 import json
 import os
+import re
 from typing import Any, Callable
 
 import jax
@@ -52,8 +70,8 @@ from repro.core.metrics import roofline_terms
 
 __all__ = ["HloDiskCache"]
 
-_FORMAT_VERSION = 1
-_MAX_REASONS = 20  # keep fallback_reasons bounded on pathological runs
+_FORMAT_VERSION = 2  # v2: sidecar serialized-executable tier
+_MAX_REASONS = 20  # keep fallback/skip reason lists bounded
 
 
 def _flat_out_structure(out_info: Any) -> tuple[int, bool] | None:
@@ -92,45 +110,102 @@ def _source_digest() -> str:
     return h.hexdigest()[:12]
 
 
+def _topology_token() -> str:
+    """Device kind × count: a serialized executable is compiled for a
+    device, so a different accelerator (or forced host-device count) must
+    get its own cache directory, not a deserialization failure."""
+    devices = jax.devices()
+    kind = re.sub(r"[^A-Za-z0-9_.-]+", "_", devices[0].device_kind) or "unknown"
+    return f"{kind}x{len(devices)}"
+
+
+def _jaxlib_version() -> str:
+    try:
+        import jaxlib
+
+        return getattr(jaxlib, "__version__", "unknown")
+    except Exception:  # noqa: BLE001 — version tag is best-effort
+        return "unknown"
+
+
 class HloDiskCache:
-    """Persist lowered HLO text + static characterization per cache key."""
+    """Two-tier persistent artifact cache: serialized executables over
+    lowered HLO text, both keyed per compile-cache key."""
 
     def __init__(self, root: str) -> None:
         backend = jax.default_backend()
         self.root = os.path.join(
-            root, f"jax-{jax.__version__}-{backend}-{_source_digest()}"
+            root,
+            f"jax-{jax.__version__}-jaxlib-{_jaxlib_version()}-{backend}-"
+            f"{_topology_token()}-{_source_digest()}",
         )
         os.makedirs(self.root, exist_ok=True)
         self.hits = 0  # warm loads that produced a working executable
+        self.exe_hits = 0  # ...of which tier 1: zero XLA compilation
+        self.hlo_hits = 0  # ...of which tier 2: one compile, no retrace
         self.misses = 0  # lookups that fell back to tracing
-        self.stores = 0
+        self.stores = 0  # payloads written (HLO text + characterization)
+        self.exe_stores = 0  # ...with a serialized-executable sidecar
+        self.xla_compiles = 0  # compilations this cache triggered (tier 2)
         # Fallback diagnostics: a *fallback* is a present-but-unusable
         # entry (corrupt payload, stale format, failed trial call) — a
         # missing file is just a cold miss and is not recorded here.
-        self.fallback_count = 0
+        self.fallback_count = 0  # fell all the way back to retracing
         self.fallback_reasons: list[str] = []  # capped at _MAX_REASONS
         self.last_fallback: str | None = None
+        self.exe_fallbacks = 0  # tier 1 unusable, degraded to tier 2
+        self.last_exe_fallback: str | None = None
+        # Lookups the engine declined to attempt (multi-device placements):
+        # counted here so the skip is visible in summary(), not silent.
+        self.skips = 0
+        self.skip_reasons: list[str] = []  # capped at _MAX_REASONS
+        self.last_skip: str | None = None
 
     def _path(self, key: tuple) -> str:
         digest = hashlib.sha256(repr(key).encode()).hexdigest()[:24]
         return os.path.join(self.root, f"{digest}.json")
 
-    def _note_fallback(self, key: tuple, exc: BaseException) -> None:
+    def _exe_path(self, key: tuple) -> str:
+        return self._path(key)[: -len(".json")] + ".exe"
+
+    @staticmethod
+    def _reason(key: tuple, exc: BaseException) -> str:
         name = key[0] if key else "?"
         reason = " ".join(f"{name}: {type(exc).__name__}: {exc}".split())
-        if len(reason) > 200:
-            reason = reason[:197] + "..."
+        return reason if len(reason) <= 200 else reason[:197] + "..."
+
+    def _note_fallback(self, key: tuple, exc: BaseException) -> None:
+        reason = self._reason(key, exc)
         self.fallback_count += 1
         self.last_fallback = reason
         if len(self.fallback_reasons) < _MAX_REASONS:
             self.fallback_reasons.append(reason)
 
+    def _note_exe_fallback(self, key: tuple, exc: BaseException) -> None:
+        self.exe_fallbacks += 1
+        self.last_exe_fallback = self._reason(key, exc)
+
+    def note_skip(self, key: tuple, reason: str) -> None:
+        """Record a lookup the caller declined to attempt (and why)."""
+        name = key[0] if key else "?"
+        self.skips += 1
+        self.last_skip = f"{name}: {reason}"
+        if len(self.skip_reasons) < _MAX_REASONS:
+            self.skip_reasons.append(self.last_skip)
+
     def summary(self) -> str:
         """One-line cache diagnosis for verbose engine output."""
         line = (
-            f"hlocache: hits={self.hits} misses={self.misses} "
-            f"stores={self.stores} fallbacks={self.fallback_count}"
+            f"hlocache: hits={self.hits} exe_hits={self.exe_hits} "
+            f"hlo_hits={self.hlo_hits} misses={self.misses} "
+            f"stores={self.stores} exe_stores={self.exe_stores} "
+            f"xla_compiles={self.xla_compiles} "
+            f"fallbacks={self.fallback_count} exe_fallbacks={self.exe_fallbacks}"
         )
+        if self.skips:
+            line += f" skips={self.skips} last_skip=[{self.last_skip}]"
+        if self.last_exe_fallback is not None:
+            line += f" last_exe_fallback=[{self.last_exe_fallback}]"
         if self.last_fallback is not None:
             line += f" last_fallback=[{self.last_fallback}]"
         return line
@@ -138,9 +213,11 @@ class HloDiskCache:
     # -- store -------------------------------------------------------------
 
     def store(self, key: tuple, lowered: Any, compiled: Any, name: str) -> None:
-        """Persist one lowering. Best-effort: outputs that are not a flat
-        tuple of arrays, or analyses this backend does not expose, simply
-        skip the store — a miss next run, never an error this run."""
+        """Persist one compile: the HLO-text payload, and — when the
+        backend supports AOT serialization — the executable sidecar.
+        Best-effort: outputs that are not a flat tuple of arrays, or
+        analyses this backend does not expose, simply skip the store — a
+        miss next run, never an error this run."""
         try:
             out = _flat_out_structure(lowered.out_info)
             if out is None:
@@ -159,10 +236,35 @@ class HloDiskCache:
                 "hlo": text,
                 "n_outputs": n_outputs,
                 "single": single,
+                # jax.jit prunes arguments the program never reads; the raw
+                # executable then wants only the kept ones. None = keep all
+                # (also the right answer when the internal attr moves — the
+                # trial call catches any drift).
+                "kept_args": _kept_arg_indices(compiled),
                 "cost": cost_analysis_dict(compiled),
                 "memory": _memory_analysis_dict(compiled),
                 "collective_bytes": collective_bytes_from_hlo(compiled.as_text()),
             }
+            # Executable sidecar first: if serialization is unsupported the
+            # payload alone still buys tier 2; if the payload write then
+            # fails, an orphan .exe is unreachable (loads start at .json).
+            exe_path = self._exe_path(key)
+            try:
+                blob = _serialize_executable(compiled)
+                tmp = exe_path + ".tmp"
+                with open(tmp, "wb") as f:
+                    f.write(blob)
+                os.replace(tmp, exe_path)
+                self.exe_stores += 1
+            except Exception:  # noqa: BLE001 — tier 1 is an accelerator
+                for stale in (exe_path + ".tmp", exe_path):
+                    # Drop both the torn tmp and any stale sidecar: never
+                    # pair an old executable with new lowering text.
+                    if os.path.exists(stale):
+                        try:
+                            os.remove(stale)
+                        except OSError:
+                            pass
             path = self._path(key)
             tmp = path + ".tmp"
             with open(tmp, "w") as f:
@@ -177,11 +279,15 @@ class HloDiskCache:
     def load(
         self, key: tuple, args: tuple
     ) -> tuple[Callable[..., Any], CompiledInfo] | None:
-        """Compile the stored HLO text directly (no retrace) and rebuild the
-        memoized characterization. One trial execution validates the
-        call convention; any failure returns None (caller retraces) and —
-        unless the entry simply wasn't there — is counted and named in
-        the fallback diagnostics."""
+        """Restore one compile from disk, best tier first.
+
+        Tier 1 deserializes the stored executable (no retrace, no XLA
+        compile); tier 2 compiles the stored HLO text directly (no
+        retrace). Either way the memoized characterization is rebuilt and
+        one trial execution validates the call convention; any failure
+        degrades to the next tier and — unless the entry simply wasn't
+        there — is counted and named in the fallback diagnostics. Returns
+        None when the caller must retrace."""
         path = self._path(key)
         if not os.path.exists(path):
             self.misses += 1  # cold miss: nothing to fall back from
@@ -191,10 +297,28 @@ class HloDiskCache:
                 payload = json.load(f)
             if payload.get("format") != _FORMAT_VERSION:
                 raise ValueError("stale cache format")
-            executable = _compile_text(
-                payload["hlo"], int(payload["n_outputs"]), bool(payload["single"])
-            )
-            jax.block_until_ready(executable(*args))  # trial call
+            n_outputs = int(payload["n_outputs"])
+            single = bool(payload["single"])
+            kept = payload.get("kept_args")
+            kept = [int(i) for i in kept] if kept is not None else None
+            executable = None
+            exe_path = self._exe_path(key)
+            if os.path.exists(exe_path):
+                try:
+                    with open(exe_path, "rb") as f:
+                        blob = f.read()
+                    executable = _deserialize_executable(
+                        blob, n_outputs, single, kept
+                    )
+                    jax.block_until_ready(executable(*args))  # trial call
+                except Exception as e:  # noqa: BLE001 — degrade to tier 2
+                    self._note_exe_fallback(key, e)
+                    executable = None
+            via_exe = executable is not None
+            if executable is None:
+                executable = _compile_text(payload["hlo"], n_outputs, single, kept)
+                self.xla_compiles += 1
+                jax.block_until_ready(executable(*args))  # trial call
             info = CompiledInfo(
                 name=payload["name"],
                 cost=dict(payload["cost"]),
@@ -210,21 +334,39 @@ class HloDiskCache:
             self._note_fallback(key, e)
             return None
         self.hits += 1
+        if via_exe:
+            self.exe_hits += 1
+        else:
+            self.hlo_hits += 1
         return executable, info
 
 
-def _compile_text(
-    text: str, n_outputs: int, single: bool
-) -> Callable[..., Any]:
-    from jax.extend import backend as jex_backend
+def _kept_arg_indices(compiled: Any) -> list[int] | None:
+    """Flat indices of the arguments the compiled program actually reads
+    (jax.jit prunes unused ones from the XLA signature), or None for
+    all-kept / attr-unavailable — best-effort, backstopped by the trial
+    call at load time."""
+    try:
+        kept = compiled._executable._kept_var_idx
+        return sorted(int(i) for i in kept)
+    except Exception:  # noqa: BLE001 — internal attr, may move across jax
+        return None
 
-    exe = jex_backend.get_backend().compile(text)
+
+def _wrap_executable(
+    exe: Any, n_outputs: int, single: bool, kept: list[int] | None = None
+) -> Callable[..., Any]:
+    """Adapt a raw loaded executable to the jitted-call convention the
+    engine's timer/serve stages use (flat args in, folded outputs out,
+    pruned args dropped)."""
 
     def call(*args: Any) -> Any:
         flat = [
             a if isinstance(a, jax.Array) else jnp.asarray(a)
             for a in jax.tree_util.tree_leaves(args)
         ]
+        if kept is not None:
+            flat = [flat[i] for i in kept]
         outs = exe.execute(flat)
         if len(outs) != n_outputs:
             raise RuntimeError(
@@ -234,3 +376,32 @@ def _compile_text(
         return outs[0] if single else tuple(outs)
 
     return call
+
+
+def _serialize_executable(compiled: Any) -> bytes:
+    """AOT-serialize a ``jax.stages.Compiled``'s loaded executable."""
+    from jax.extend import backend as jex_backend
+
+    exe = compiled.runtime_executable()
+    return jex_backend.get_backend().serialize_executable(exe)
+
+
+def _deserialize_executable(
+    blob: bytes, n_outputs: int, single: bool, kept: list[int] | None = None
+) -> Callable[..., Any]:
+    """Tier 1: bytes → runnable, with zero XLA compilation."""
+    from jax.extend import backend as jex_backend
+
+    exe = jex_backend.get_backend().deserialize_executable(blob)
+    return _wrap_executable(exe, n_outputs, single, kept)
+
+
+def _compile_text(
+    text: str, n_outputs: int, single: bool, kept: list[int] | None = None
+) -> Callable[..., Any]:
+    """Tier 2: stored StableHLO text → runnable (one XLA compilation,
+    no Python retrace)."""
+    from jax.extend import backend as jex_backend
+
+    exe = jex_backend.get_backend().compile(text)
+    return _wrap_executable(exe, n_outputs, single, kept)

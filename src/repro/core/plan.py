@@ -4,7 +4,10 @@ An :class:`ExecutionPlan` is a frozen value object describing *what* to run
 (selection by level / name / tag / domain, or an explicit spec list), *at
 what size* (SHOC-style preset plus Rodinia-style per-benchmark overrides),
 *which passes* (forward, and backward where a workload defines one), *how to
-measure* (iters / warmup / seed), *where* (a :class:`Placement` —
+measure* (iters / warmup / seed, plus ``timing_window`` — sync-mode timing
+always runs; a window K > 1 additionally measures with K calls in flight
+per synchronization, riding async dispatch, so records carry both
+``us_per_call`` and ``us_per_call_windowed``), *where* (a :class:`Placement` —
 device count plus mode, ``replicate`` or ``shard``, realized through
 ``runtime/sharding`` helpers; ``device_sweep`` runs the same selection at
 several device counts for scaling curves), and *under what load* (an
@@ -196,6 +199,12 @@ class ExecutionPlan:
     iters: int = 5
     warmup: int = 2
     seed: int = 0
+    # Windowed timing: per measured pass, additionally dispatch `iters`
+    # windows of K calls and synchronize once per window (K=1 disables —
+    # sync-only, the pre-v5 behaviour). Sync mode always runs; the
+    # windowed number amortizes per-call dispatch+sync overhead, which is
+    # the paper's async-runtime timing pitfall for small kernels.
+    timing_window: int = 4
     # Multi-device placement: a frozen Placement(devices, mode) value object.
     # `devices=N` remains accepted as back-compat sugar for
     # Placement(devices=N, mode="replicate"); after construction
@@ -228,6 +237,11 @@ class ExecutionPlan:
             raise ValueError(f"iters must be >= 1, got {self.iters}")
         if self.warmup < 0:
             raise ValueError(f"warmup must be >= 0, got {self.warmup}")
+        if self.timing_window < 1:
+            raise ValueError(
+                f"timing_window must be >= 1 (1 = sync-only), "
+                f"got {self.timing_window}"
+            )
         if self.serve is not None and not isinstance(self.serve, ServeSpec):
             raise PlanError(f"serve must be a ServeSpec, got {self.serve!r}")
         self._resolve_placement()

@@ -46,7 +46,11 @@ __all__ = [
 #     co-location slowdown; RunMetadata carries the ServeSpec.
 # v4: serving-client rows — serve_client (single|threaded), truncation
 #     honesty flag, dispatch_overhead_us, per-lane achieved QPS.
-SCHEMA_VERSION = 4
+# v5: windowed timing — us_per_call_windowed (K calls in flight per
+#     synchronization), timing_window, timer_dispatch_us (sync − windowed,
+#     the per-call dispatch+sync overhead sync mode folds in); RunMetadata
+#     carries the plan's timing_window.
+SCHEMA_VERSION = 5
 
 
 class ReportError(ValueError):
@@ -78,6 +82,14 @@ class BenchmarkRecord:
     so the run offered *less* than ``offered_qps``),
     ``dispatch_overhead_us`` (mean host time per dispatch, threaded
     client), and ``lane_qps`` (per-lane achieved QPS).
+
+    Schema v5 adds the windowed-timing columns: ``us_per_call`` stays the
+    sync-mode number (synchronize every call — comparable across all
+    schema versions), ``us_per_call_windowed`` is the per-call time with
+    ``timing_window`` calls in flight per synchronization (closer to true
+    device throughput for dispatch-bound kernels), and
+    ``timer_dispatch_us`` is their difference — the measured per-call
+    host dispatch + sync overhead.
     """
 
     name: str
@@ -97,6 +109,11 @@ class BenchmarkRecord:
     devices: int = 1
     placement: str = "replicate"
     scaling_efficiency: float | None = None
+    # Windowed timing columns (schema v5) — None when only sync mode ran
+    # (timing_window=1 plans, no_jit workloads, pre-v5 rows).
+    us_per_call_windowed: float | None = None
+    timing_window: int | None = None
+    timer_dispatch_us: float | None = None  # sync − windowed, clamped at 0
     # Serving columns (schema v3) — None unless the plan had a ServeSpec.
     serve_mode: str | None = None
     serve_lanes: int | None = None
@@ -220,6 +237,9 @@ class BenchmarkRecord:
             ),
             devices=devices,
             placement=placement,
+            us_per_call_windowed=timing.us_per_call_windowed,
+            timing_window=timing.timing_window,
+            timer_dispatch_us=timing.timer_dispatch_us,
         )
 
     @classmethod
@@ -263,6 +283,13 @@ class BenchmarkRecord:
             if self.scaling_efficiency is not None
             else ""
         )
+        if self.us_per_call_windowed is not None:
+            # The windowed per-call time and the dispatch overhead it
+            # exposes ride the derived field next to the sync number.
+            eff += (
+                f";win_us={self.us_per_call_windowed:.2f}"
+                f";timer_dispatch_us={self.timer_dispatch_us:.2f}"
+            )
         serve = ""
         if self.serve_mode is not None:
             # Pre-v4 rows have no serve_client; they were served by the
@@ -314,6 +341,7 @@ class RunMetadata:
     placement: str = "replicate"
     device_sweep: tuple[int, ...] = (1,)
     serve: ServeSpec | None = None
+    timing_window: int = 1  # 1 = sync-only (pre-v5 runs)
 
     def __post_init__(self) -> None:
         # JSON round-trips tuples as lists and nested dataclasses as dicts;
@@ -337,6 +365,7 @@ class RunMetadata:
         placement: str = "replicate",
         device_sweep: tuple[int, ...] | None = None,
         serve: ServeSpec | None = None,
+        timing_window: int = 1,
     ) -> "RunMetadata":
         import jax
 
@@ -349,6 +378,7 @@ class RunMetadata:
             placement=placement,
             device_sweep=device_sweep if device_sweep is not None else (devices,),
             serve=serve,
+            timing_window=timing_window,
         )
 
 

@@ -25,8 +25,18 @@ thread per lane, with dispatch-overhead and per-lane QPS columns);
 ``--slo-us`` adds a latency SLO and the ``goodput_qps`` column;
 ``--colocate NAME`` serves each workload against a partner benchmark and
 records both tenants' slowdown vs their isolated baselines.
-``--cache-dir`` persists lowered HLO text across processes so repeat runs
-skip retracing (verbose runs print its hit/fallback summary).
+``--cache-dir`` persists compile artifacts across processes — two tiers:
+serialized executables (warm runs skip tracing AND XLA compilation — the
+zero-compile warm start) over lowered HLO text (skips retracing only);
+the CLI always prints the cache's hit/fallback/skip summary so a cache
+that never hits is visible.
+
+Timing flags: sync-mode timing (synchronize every call) always runs and
+fills ``us_per_call``; ``--timing-window K`` (default 4; 1 disables)
+additionally measures with K calls in flight per synchronization, riding
+async dispatch, filling ``us_per_call_windowed`` and the derived per-call
+dispatch overhead — the accurate-kernel-time story for small kernels on
+an async runtime.
 """
 
 from __future__ import annotations
@@ -91,6 +101,7 @@ def run_suite(
     warmup: int = 2,
     include_backward: bool = True,
     seed: int = 0,
+    timing_window: int | None = None,
     devices: int = 1,
     placement: str = "replicate",
     scale_devices: Sequence[int] | None = None,
@@ -100,6 +111,9 @@ def run_suite(
     verbose: bool = True,
     engine: Engine | None = None,
 ) -> list[BenchmarkRecord]:
+    plan_kwargs: dict[str, Any] = {}
+    if timing_window is not None:  # None = the plan's default window
+        plan_kwargs["timing_window"] = timing_window
     plan = ExecutionPlan(
         levels=tuple(levels),
         names=tuple(names) if names is not None else None,
@@ -114,6 +128,7 @@ def run_suite(
         placement=Placement(devices=devices, mode=placement),
         device_sweep=tuple(scale_devices) if scale_devices is not None else None,
         serve=serve,
+        **plan_kwargs,
     )
     result = (engine or DEFAULT_ENGINE).run(
         plan, report_path=report_path, jsonl_path=jsonl_path, verbose=verbose
@@ -212,6 +227,10 @@ def main(argv: Sequence[str] | None = None) -> int:
     ap.add_argument("--iters", type=int, default=5)
     ap.add_argument("--warmup", type=int, default=2)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--timing-window", type=int, default=None, metavar="K",
+                    help="windowed timing: K calls in flight per "
+                         "synchronization alongside the sync-mode number "
+                         "(default 4; 1 = sync-only)")
     ap.add_argument("--devices", type=int, default=1,
                     help="run on the first N devices")
     ap.add_argument("--placement", choices=PLACEMENT_MODES, default="replicate",
@@ -251,15 +270,19 @@ def main(argv: Sequence[str] | None = None) -> int:
                          "benchmark and record slowdown-vs-isolated "
                          "(implies --serve closed)")
     ap.add_argument("--cache-dir", type=str, default=None,
-                    help="persist lowered HLO text here (keyed by compile-"
-                         "cache key, versioned by jax version + backend) so "
-                         "repeat runs skip retracing; a CI accelerator — "
-                         "warm-run timings include a thin dispatch wrapper")
+                    help="persist compile artifacts here (serialized "
+                         "executables + lowered HLO text, keyed by compile-"
+                         "cache key, versioned by jax/jaxlib/backend/"
+                         "topology) so warm runs skip retracing and XLA "
+                         "compilation entirely; a CI accelerator — warm-run "
+                         "timings include a thin dispatch wrapper")
     ap.add_argument("--no-backward", action="store_true")
     ap.add_argument("--report", type=str, default=None, help="JSON report path")
     ap.add_argument("--jsonl", type=str, default=None,
                     help="streaming JSONL report path (with run metadata)")
     args = ap.parse_args(argv)
+    # Engine(cache_dir=...) also points jax's own persistent compilation
+    # cache at the directory, so input-builder compiles warm too.
     engine = Engine(cache_dir=args.cache_dir) if args.cache_dir else None
     try:
         records = _run_cli(args, engine)
@@ -299,6 +322,7 @@ def _run_cli(args, engine: Engine | None = None) -> list[BenchmarkRecord]:
         iters=args.iters,
         warmup=args.warmup,
         seed=args.seed,
+        timing_window=args.timing_window,
         devices=args.devices,
         placement=args.placement,
         scale_devices=_parse_scale_devices(args.scale_devices),

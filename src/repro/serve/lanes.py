@@ -14,7 +14,12 @@ Three dispatch modes generalize the old ``feat_hyperq`` serial-loop-vs-
 batched split:
 
 - ``loop``   — synchronize after every call (:func:`serve_loop`); the
-  no-concurrency baseline every speedup is measured against.
+  no-concurrency baseline every speedup is measured against. With
+  ``window=K`` it becomes the *windowed* floor: dispatch K requests back
+  to back, synchronize once on all of them — the same
+  amortize-the-sync move as ``harness.time_fn``'s windowed timing mode,
+  so the gap between the two floors is the measured per-request
+  dispatch + sync overhead of serial dispatch.
 - ``lanes``  — N lanes × depth-D windows (:func:`run_closed_loop` /
   :func:`run_open_loop`); host dispatch overlaps device execution.
 - ``batched``— N instances fused into one program via ``vmap``
@@ -193,22 +198,58 @@ def lane_depth(concurrency: int, n_lanes: int) -> int:
 
 
 def serve_loop(
-    call: Callable[[], Any], requests: Iterable[Request]
+    call: Callable[[], Any],
+    requests: Iterable[Request],
+    *,
+    window: int = 1,
 ) -> list[Completion]:
-    """``loop`` dispatch: synchronize after every call (no concurrency)."""
+    """``loop`` dispatch: synchronize after every call (no concurrency).
+
+    ``window=K`` dispatches K requests back to back and synchronizes once
+    on **all** of them (blocking only on the last could under-measure if
+    the runtime completes computations out of order). Requests in a
+    window share the window's completion stamp, so per-request latency
+    becomes window-granular — use windowed loops for *throughput* floors
+    (the per-call quotient), sync loops for latency floors.
+    """
+    if window < 1:
+        raise ValueError(f"window must be >= 1, got {window}")
     out: list[Completion] = []
-    for req in requests:
-        t0 = time.perf_counter()
-        jax.block_until_ready(call())
-        out.append(
+    if window == 1:
+        for req in requests:
+            t0 = time.perf_counter()
+            jax.block_until_ready(call())
+            out.append(
+                Completion(
+                    index=req.index,
+                    lane=0,
+                    t_submit=t0,
+                    t_done=time.perf_counter(),
+                    warmup=req.warmup,
+                )
+            )
+        return out
+    pending: list[tuple[Request, float, Any]] = []
+
+    def flush() -> None:
+        if not pending:
+            return
+        jax.block_until_ready([p[2] for p in pending])
+        t_done = time.perf_counter()
+        out.extend(
             Completion(
-                index=req.index,
-                lane=0,
-                t_submit=t0,
-                t_done=time.perf_counter(),
+                index=req.index, lane=0, t_submit=t0, t_done=t_done,
                 warmup=req.warmup,
             )
+            for req, t0, _ in pending
         )
+        pending.clear()
+
+    for req in requests:
+        pending.append((req, time.perf_counter(), call()))
+        if len(pending) >= window:
+            flush()
+    flush()
     return out
 
 

@@ -1,6 +1,7 @@
-"""Persistent HLO-text compile cache: warm runs skip retracing, failures
-fall back to the normal trace-and-compile path, and entries are versioned
-by toolchain."""
+"""Two-tier persistent compile cache: warm runs restore serialized
+executables (zero retrace, zero XLA compile), degrade one tier at a time
+(executable → HLO text → retrace) with counted, explained fallbacks, and
+entries are versioned by toolchain + topology."""
 
 import json
 import os
@@ -24,21 +25,29 @@ def test_cold_run_populates_cache_dir_with_versioned_entries(tmp_path):
     res = eng.run(ExecutionPlan(names=("pathfinder", "softmax"), **FAST))
     assert [r.status for r in res.records] == ["ok", "ok"]
     assert eng.disk_cache.stores == 2
+    assert eng.disk_cache.exe_stores == 2  # tier-1 sidecars written too
     assert eng.disk_cache.hits == 0
     version_dir = _version_dir(root)
-    # Versioned by toolchain AND a content hash of the repro package, so
-    # an edited kernel misses instead of replaying its old lowering.
-    assert os.path.basename(version_dir).startswith(
-        f"jax-{jax.__version__}-{jax.default_backend()}-"
-    )
-    entries = os.listdir(version_dir)
-    assert len(entries) == 2 and all(e.endswith(".json") for e in entries)
-    payload = json.load(open(os.path.join(version_dir, entries[0])))
+    # Versioned by toolchain (jax + jaxlib + backend), topology (device
+    # kind x count — serialized executables are compiled *for* a device),
+    # AND a content hash of the repro package, so an edited kernel misses
+    # instead of replaying its old artifacts.
+    base = os.path.basename(version_dir)
+    assert base.startswith(f"jax-{jax.__version__}-jaxlib-")
+    assert f"-{jax.default_backend()}-" in base
+    assert f"x{jax.device_count()}-" in base
+    entries = sorted(os.listdir(version_dir))
+    # One .json payload + one .exe serialized-executable sidecar per entry.
+    assert len(entries) == 4
+    assert [e for e in entries if e.endswith(".json")] != []
+    assert len([e for e in entries if e.endswith(".exe")]) == 2
+    payload_path = next(e for e in entries if e.endswith(".json"))
+    payload = json.load(open(os.path.join(version_dir, payload_path)))
     assert payload["hlo"].lstrip().startswith("module")
     assert "cost" in payload and "memory" in payload
 
 
-def test_warm_run_hits_disk_and_matches_cold_records(tmp_path):
+def test_warm_run_hits_exe_tier_and_matches_cold_records(tmp_path):
     root = str(tmp_path / "hlo")
     plan = ExecutionPlan(names=("pathfinder",), **FAST)
     cold = Engine(cache_dir=root).run(plan)
@@ -46,6 +55,8 @@ def test_warm_run_hits_disk_and_matches_cold_records(tmp_path):
     warm_engine = Engine(cache_dir=root)
     warm = warm_engine.run(plan)
     assert warm_engine.disk_cache.hits == 1
+    assert warm_engine.disk_cache.exe_hits == 1  # tier 1: no compilation
+    assert warm_engine.disk_cache.hlo_hits == 0
     assert warm_engine.disk_cache.misses == 0
     (c,), (w,) = cold.records, warm.records
     assert w.status == "ok"
@@ -54,6 +65,35 @@ def test_warm_run_hits_disk_and_matches_cold_records(tmp_path):
     assert w.dominant == c.dominant
     assert w.derived == c.derived
     assert w.us_per_call > 0
+
+
+def test_warm_suite_run_performs_zero_xla_compiles(tmp_path):
+    """The zero-compile warm start, asserted on counters: every warm
+    lookup restores a serialized executable — no retrace (misses=0), no
+    tier-2 compile (hlo_hits=0, xla_compiles=0), no silent degradation
+    (fallbacks=0) — across a multi-benchmark slice including forward and
+    backward passes."""
+    root = str(tmp_path / "hlo")
+    plan = ExecutionPlan(
+        names=("pathfinder", "softmax", "gemm_f32_nn"),
+        preset=0, iters=1, warmup=0, include_backward=True,
+    )
+    cold_engine = Engine(cache_dir=root)
+    cold = cold_engine.run(plan)
+    n_entries = cold_engine.disk_cache.stores
+    assert n_entries == len(cold.ok_records) >= 4  # fwd rows + some bwd
+
+    warm_engine = Engine(cache_dir=root)
+    warm = warm_engine.run(plan)
+    dc = warm_engine.disk_cache
+    assert [r.status for r in warm.records] == ["ok"] * len(cold.records)
+    assert dc.exe_hits == n_entries, dc.summary()
+    assert dc.hlo_hits == 0, dc.summary()
+    assert dc.misses == 0, dc.summary()
+    assert dc.xla_compiles == 0, dc.summary()
+    assert dc.fallback_count == 0 and dc.exe_fallbacks == 0, dc.summary()
+    # Warm rows still carry both timing modes (schema v5).
+    assert all(r.us_per_call_windowed is not None for r in warm.ok_records)
 
 
 def test_corrupt_cache_entry_falls_back_to_retrace(tmp_path):
@@ -71,6 +111,31 @@ def test_corrupt_cache_entry_falls_back_to_retrace(tmp_path):
     assert eng.disk_cache.hits == 0
     assert eng.disk_cache.misses == 1
     assert eng.disk_cache.stores == 1  # the retrace re-stored a good entry
+
+
+def test_corrupt_exe_sidecar_degrades_to_hlo_tier_not_retrace(tmp_path):
+    """Tier degradation is one step at a time: a blown executable blob
+    still leaves the run with the stored lowering (one compile, no
+    retrace), and the degradation is counted and named."""
+    root = str(tmp_path / "hlo")
+    plan = ExecutionPlan(names=("pathfinder",), **FAST)
+    Engine(cache_dir=root).run(plan)
+    version_dir = _version_dir(root)
+    for entry in os.listdir(version_dir):
+        if entry.endswith(".exe"):
+            with open(os.path.join(version_dir, entry), "wb") as f:
+                f.write(b"not an executable")
+
+    eng = Engine(cache_dir=root)
+    res = eng.run(plan)
+    dc = eng.disk_cache
+    assert [r.status for r in res.records] == ["ok"]
+    assert dc.hits == 1 and dc.hlo_hits == 1 and dc.exe_hits == 0
+    assert dc.xla_compiles == 1  # tier 2 paid exactly one compile
+    assert dc.exe_fallbacks == 1
+    assert dc.last_exe_fallback is not None and "pathfinder" in dc.last_exe_fallback
+    assert dc.fallback_count == 0  # never fell all the way back
+    assert dc.misses == 0
 
 
 def test_fallbacks_are_counted_and_explained_not_silent(tmp_path, capsys):
@@ -115,7 +180,7 @@ def test_suite_cli_prints_cache_summary_with_cache_dir(tmp_path, capsys):
     assert "hlocache:" in err and "stores=1" in err
 
 
-def test_disk_cache_skips_multi_device_entries(tmp_path):
+def test_disk_cache_skips_multi_device_entries_with_recorded_reason(tmp_path):
     import subprocess
     import sys
     import textwrap
@@ -135,7 +200,14 @@ def test_disk_cache_skips_multi_device_entries(tmp_path):
             placement=Placement(devices=4, mode="shard"),
         ))
         assert res.records[0].status == "ok", res.records[0].error
-        assert eng.disk_cache.stores == 0, eng.disk_cache.stores
+        dc = eng.disk_cache
+        assert dc.stores == 0, dc.stores
+        # The skip is accounted, not silent: counter + named reason,
+        # surfaced by summary().
+        assert dc.skips == 1, dc.skips
+        assert "multi-device" in dc.last_skip, dc.last_skip
+        assert "gemm_f32_nn" in dc.last_skip, dc.last_skip
+        assert "skips=1" in dc.summary(), dc.summary()
         print("OK")
     """)
     out = subprocess.run(

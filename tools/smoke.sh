@@ -12,6 +12,17 @@
 # columns (threaded runs additionally assert the dispatch-overhead and
 # per-lane QPS accounting), plus — for the single client — one
 # co-location pair asserting slowdown-vs-isolated on both tenants' rows.
+#
+# With --warm-cache, instead run the zero-compile smoke: the same suite
+# slice twice against one --cache-dir, asserting the warm run restored
+# every entry from the serialized-executable tier — zero retraces, zero
+# XLA compilations, zero fallbacks (the printed hlocache counters are
+# parsed and checked) — and produced only ok records.
+#
+# With --bench [PATH], instead write the perf-trajectory artifact
+# (default artifacts/BENCH_5.json): suite wall time cold vs warm under
+# --cache-dir, per-benchmark sync + windowed per-call microseconds, and
+# the warm run's cache counters, so future PRs have a baseline.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -118,6 +129,142 @@ print("co-location smoke: slowdowns "
       + ", ".join(f"{r.name}={r.slowdown_vs_isolated:.2f}" for r in records))
 PY
   fi
+  exit 0
+fi
+
+if [[ "${1:-}" == "--warm-cache" ]]; then
+  cache="$out/cache"
+
+  python -m repro.core.suite \
+    --levels 0 1 --preset 0 --iters 1 --warmup 0 --no-backward \
+    --cache-dir "$cache" --jsonl "$out/cold.jsonl" 2> "$out/cold.err" \
+    || { cat "$out/cold.err" >&2; exit 1; }
+  grep '^# hlocache:' "$out/cold.err"
+  python -m repro.core.suite \
+    --levels 0 1 --preset 0 --iters 1 --warmup 0 --no-backward \
+    --cache-dir "$cache" --jsonl "$out/warm.jsonl" 2> "$out/warm.err" \
+    || { cat "$out/warm.err" >&2; exit 1; }
+  grep '^# hlocache:' "$out/warm.err"
+
+  python - "$out/cold.err" "$out/warm.err" "$out/warm.jsonl" <<'PY'
+import re
+import sys
+
+from repro.core.results import load_run
+
+
+def counters(path):
+    with open(path) as f:
+        (line,) = [l for l in f if l.startswith("# hlocache:")]
+    return {k: int(v) for k, v in re.findall(r"(\w+)=(\d+)", line)}, line
+
+cold, cold_line = counters(sys.argv[1])
+warm, warm_line = counters(sys.argv[2])
+assert cold["stores"] > 0, f"cold run stored nothing: {cold_line}"
+# The zero-compile warm start: every lookup restored a serialized
+# executable — no retrace (misses=0), no tier-2 compile (hlo=0,
+# xla_compiles=0), no silent degradation (fallbacks=0).
+assert warm["exe_hits"] == cold["stores"], (cold_line, warm_line)
+assert warm["hits"] == warm["exe_hits"], warm_line
+assert warm["misses"] == 0, warm_line
+assert warm["xla_compiles"] == 0, warm_line
+assert warm["fallbacks"] == 0 and warm["exe_fallbacks"] == 0, warm_line
+meta, records = load_run(sys.argv[3])
+bad = [r for r in records if r.status != "ok"]
+for r in bad:
+    print(f"ERROR {r.name}: {r.error}", file=sys.stderr)
+assert not bad, f"{len(bad)} error records in the warm run"
+# Warm rows still carry both timing modes (schema v5).
+assert meta is not None and meta.schema_version >= 5, meta
+windowed = [r for r in records if r.us_per_call_windowed is not None]
+assert windowed, "warm run produced no windowed timings"
+print(f"warm-cache smoke: {warm['exe_hits']} executables restored, "
+      f"0 XLA compiles, {len(records)} ok records "
+      f"({len(windowed)} with windowed timings)")
+PY
+  exit 0
+fi
+
+if [[ "${1:-}" == "--bench" ]]; then
+  bench_path="${2:-artifacts/BENCH_5.json}"
+  cache="$out/cache"
+
+  python - "$cache" "$out" "$bench_path" <<'PY'
+import json
+import os
+import re
+import subprocess
+import sys
+import time
+
+cache, out, bench_path = sys.argv[1:4]
+cmd = [
+    sys.executable, "-m", "repro.core.suite",
+    "--levels", "0", "1", "--preset", "0", "--iters", "1", "--warmup", "0",
+    "--no-backward", "--cache-dir", cache,
+]
+
+
+def run(tag):
+    t0 = time.time()
+    proc = subprocess.run(
+        cmd + ["--jsonl", f"{out}/{tag}.jsonl"],
+        capture_output=True, text=True, env=dict(os.environ),
+    )
+    wall = time.time() - t0
+    sys.stderr.write(proc.stderr)
+    assert proc.returncode == 0, f"{tag} run failed rc={proc.returncode}"
+    (line,) = [l for l in proc.stderr.splitlines() if l.startswith("# hlocache:")]
+    return wall, {k: int(v) for k, v in re.findall(r"(\w+)=(\d+)", line)}, line
+
+wall_cold, cold, _ = run("cold")
+wall_warm, warm, warm_line = run("warm")
+assert warm["misses"] == 0 and warm["xla_compiles"] == 0, warm_line
+if wall_warm >= wall_cold:
+    # Wall clock on a shared host is advisory; the zero-compile property
+    # above is the hard check. Record the anomaly instead of failing.
+    print(f"WARNING: warm wall {wall_warm:.1f}s >= cold {wall_cold:.1f}s "
+          "(host contention?)", file=sys.stderr)
+
+from repro.core.results import load_run  # after the subprocess runs: no jax cost
+
+meta, records = load_run(f"{out}/warm.jsonl")
+bench = {
+    "bench": "BENCH_5",
+    "what": "zero-compile warm starts + windowed timing hot path",
+    "selection": "levels 0,1 preset 0 iters 1 forward-only",
+    "backend": meta.backend,
+    "jax_version": meta.jax_version,
+    "device_count": meta.device_count,
+    "timing_window": meta.timing_window,
+    "suite_wall_s_cold": round(wall_cold, 3),
+    "suite_wall_s_warm": round(wall_warm, 3),
+    "warm_speedup": round(wall_cold / wall_warm, 2),
+    "warm_cache": warm_line.lstrip("# "),
+    "benchmarks": {
+        r.name: {
+            "us_per_call": round(r.us_per_call, 2),
+            "us_per_call_windowed": (
+                round(r.us_per_call_windowed, 2)
+                if r.us_per_call_windowed is not None else None
+            ),
+            "timer_dispatch_us": (
+                round(r.timer_dispatch_us, 2)
+                if r.timer_dispatch_us is not None else None
+            ),
+        }
+        for r in records if r.status == "ok"
+    },
+}
+os.makedirs(os.path.dirname(bench_path) or ".", exist_ok=True)
+tmp = bench_path + ".tmp"
+with open(tmp, "w") as f:
+    json.dump(bench, f, indent=1, sort_keys=True)
+    f.write("\n")
+os.replace(tmp, bench_path)
+print(f"BENCH_5: cold={wall_cold:.1f}s warm={wall_warm:.1f}s "
+      f"({wall_cold / wall_warm:.1f}x) -> {bench_path}")
+PY
   exit 0
 fi
 
