@@ -1,0 +1,153 @@
+"""Implementation-axis figure: XLA vs Pallas side by side, per workload.
+
+The PR-6 analogue of the paper's per-kernel tables: every kernel-backed
+benchmark runs twice through the shared engine — once under ``impl=xla``
+(the lax/XLA expression) and once under ``impl=pallas`` (the hand-tiled
+kernel from ``src/repro/kernels/``, block parameters autotuned when
+``tune`` is on) — and the figure reports both times plus the speedup of
+the Pallas row over its XLA twin.
+
+Rows are named ``fig_impl.<benchmark>.<requested impl>``; the derived
+field carries the *effective* impl (a workload with no Pallas variant
+falls back to xla and says so), the interpret flag (Pallas rows timed
+off-TPU run in interpreter mode — a correctness row, not a perf claim),
+the tuned block parameters, and ``speedup_vs_xla``.
+
+As a section (``benchmarks/run.py --sections fig_impl``) it emits the
+standard CSV rows; as a script it prints a per-benchmark pivot table.
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+
+if __package__ in (None, ""):  # `python benchmarks/fig_impl.py`
+    sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from benchmarks.common import ERROR_PREFIX, Row, parse_derived
+from repro.core import run_suite
+
+# Kernel-backed cross-section: MXU gemm, rowreduce, band-gemm, reduce,
+# prefix-scan — one workload per kernel family the tuner has a space for.
+DEFAULT_NAMES = (
+    "gemm_f32_nn",
+    "softmax",
+    "lrn",
+    "pooling",
+    "where",
+)
+IMPLS = ("xla", "pallas")
+
+
+class ImplFigureError(ValueError):
+    """A sweep that cannot produce the figure (empty selection). main()
+    prints the one-line message and exits 2 instead of a traceback."""
+
+
+def _derive(r, xla_us: dict[str, float]) -> str:
+    parts = [f"impl={r.impl}"]
+    if r.impl_interpret is not None:
+        parts.append(f"interpret={int(r.impl_interpret)}")
+    if r.impl_fallback:
+        parts.append(f"fallback={r.impl_fallback}")
+    if r.tuned_params:
+        tuned = "/".join(f"{k}={v}" for k, v in sorted(r.tuned_params.items()))
+        parts.append(f"tuned={tuned}")
+    if r.tune_trials is not None:
+        parts.append(f"tune_trials={r.tune_trials}")
+    base = xla_us.get(r.name)
+    if r.impl == "pallas" and base:
+        parts.append(f"speedup_vs_xla={base / r.us_per_call:.3f}")
+    return ";".join(parts)
+
+
+def rows(
+    preset: int = 0,
+    names=DEFAULT_NAMES,
+    tune: bool = True,
+    iters: int = 3,
+) -> list[Row]:
+    if not names:
+        raise ImplFigureError("fig_impl: empty --names selection")
+    by_impl = {
+        impl: run_suite(
+            names=list(names),
+            preset=preset,
+            iters=iters,
+            warmup=1,
+            include_backward=False,
+            impl=impl,
+            tune=tune and impl == "pallas",
+            verbose=False,
+        )
+        for impl in IMPLS
+    }
+    xla_us = {r.name: r.us_per_call for r in by_impl["xla"] if r.status == "ok"}
+    out: list[Row] = []
+    for impl in IMPLS:
+        for r in by_impl[impl]:
+            name = f"fig_impl.{r.name}.{impl}"
+            if r.status != "ok":
+                out.append((name, 0.0, f"{ERROR_PREFIX}{r.error};{r.derived}"))
+            else:
+                out.append((name, r.us_per_call, _derive(r, xla_us)))
+    return out
+
+
+def main() -> int:
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--preset", type=int, default=0)
+    ap.add_argument("--names", nargs="*", default=list(DEFAULT_NAMES))
+    ap.add_argument("--iters", type=int, default=3)
+    ap.add_argument("--no-tune", action="store_true",
+                    help="time Pallas rows at default block sizes")
+    args = ap.parse_args()
+
+    try:
+        out = rows(
+            preset=args.preset, names=tuple(args.names),
+            tune=not args.no_tune, iters=args.iters,
+        )
+    except ImplFigureError as e:
+        print(str(e), file=sys.stderr)
+        return 2
+    except ValueError as e:  # bad selection etc. — configuration, not a crash
+        print(f"fig_impl: {e}", file=sys.stderr)
+        return 2
+    # Pivot into one line per benchmark: xla us, pallas us, speedup, tuning.
+    table: dict[str, dict[str, tuple[float, dict[str, str]]]] = {}
+    errors = 0
+    for name, us, derived in out:
+        if derived.startswith(ERROR_PREFIX):
+            errors += 1
+            print(f"# {name}: {derived}", file=sys.stderr)
+            continue
+        bench, _, impl = name.removeprefix("fig_impl.").rpartition(".")
+        table.setdefault(bench, {})[impl] = (us, parse_derived(derived))
+    if not table:
+        print(
+            f"fig_impl: zero ok records in the sweep "
+            f"({errors} error rows, see above) — nothing to tabulate",
+            file=sys.stderr,
+        )
+        return 1
+    print(f"{'benchmark':<28}{'xla us':>12}{'pallas us':>12}"
+          f"{'speedup':>9}  tuned")
+    for bench, per_impl in table.items():
+        xla_us, _ = per_impl.get("xla", (0.0, {}))
+        pal_us, fields = per_impl.get("pallas", (0.0, {}))
+        speedup = fields.get("speedup_vs_xla", "-")
+        note = fields.get("tuned", "")
+        if fields.get("fallback"):
+            note = f"fallback={fields['fallback']}"
+        if fields.get("interpret") == "1":
+            note = (note + " " if note else "") + "[interpret]"
+        print(f"{bench:<28}{xla_us:>12.1f}{pal_us:>12.1f}{speedup:>9}  {note}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -59,8 +59,10 @@ def rows_from_records(records) -> list[Row]:
 
     The measured time is the windowed per-call number when the run carried
     one (schema v5), else the sync number; the derived field keeps both
-    plus the record's analytic roofline terms, so the table reads the
-    measured-vs-bound story per benchmark without recompiling anything.
+    plus the record's analytic roofline terms and its implementation axis
+    (schema v6: ``impl=xla|pallas``, with the interpret flag on Pallas
+    rows timed off-TPU), so the table reads the measured-vs-bound story
+    per benchmark and per implementation without recompiling anything.
     """
     out: list[Row] = []
     for r in records:
@@ -73,13 +75,19 @@ def rows_from_records(records) -> list[Row]:
             if r.us_per_call_windowed is not None
             else r.us_per_call
         )
+        impl = f"impl={r.impl}"
+        if r.impl_interpret is not None:
+            impl += f";interpret={int(r.impl_interpret)}"
         derived = (
-            f"dominant={r.dominant};sync_us={r.us_per_call:.2f};"
+            f"dominant={r.dominant};{impl};sync_us={r.us_per_call:.2f};"
             f"timed={'windowed' if r.us_per_call_windowed is not None else 'sync'};"
             f"flops={terms.get('flops', '0')};bytes={terms.get('bytes', '0')};"
             f"gflops={r.achieved_gflops:.2f};gbps={r.achieved_gbps:.2f}"
         )
-        out.append((f"roofline.{r.name}", us, derived))
+        # Pallas rows get a name suffix so a report holding both impls of
+        # one workload renders two distinguishable rows.
+        suffix = ".pallas" if r.impl == "pallas" else ""
+        out.append((f"roofline.{r.name}{suffix}", us, derived))
     return out
 
 

@@ -2,9 +2,17 @@
 
 The paper maps each layer to its cuDNN kernel and classifies convolution as
 compute-bound vs batch-norm as memory-bound from IPC/eligible-warp metrics
-(§V-A). Here each layer maps to its TPU kernel (Pallas or XLA op) and the
-classification falls out of the roofline terms — the reproduction check is
-that convolution lands compute-dominant and batchnorm memory-dominant.
+(§V-A). Here each layer maps to its TPU kernel and the classification falls
+out of the roofline terms — the reproduction check is that convolution
+lands compute-dominant and batchnorm memory-dominant.
+
+Since PR 6 the kernel column is the engine's ``impl`` axis, not a static
+label: layers with a Pallas variant get one row per implementation (the
+XLA/reference lowering and the hand-tiled kernel), both characterized
+through ``DEFAULT_ENGINE`` so the compiled executables are cached
+alongside the fig3/fig4 runs of the same preset. Pallas backward rows are
+skipped — the engine falls back to xla for backward passes, so the row
+would duplicate its xla twin.
 """
 
 from __future__ import annotations
@@ -14,40 +22,46 @@ from repro.core import ExecutionPlan
 from repro.core.registry import get_benchmark
 from repro.core.suite import DEFAULT_ENGINE
 
+# name -> (xla kernel label, pallas kernel label or None, classification).
 _KERNEL_MAP = {
-    "activation": ("xla:relu-fusion", "elementwise"),
-    "pooling": ("pallas:avgpool reshape-reduce", "reduce"),
-    "batchnorm": ("xla:bn-fusion", "stats+scale"),
-    "connected": ("pallas:matmul (MXU)", "gemm"),
-    "convolution_xla": ("xla:conv (MXU)", "conv"),
-    "convolution_im2col": ("pallas:matmul via im2col", "gemm"),
-    "dropout": ("xla:threefry fusion", "prng+mask"),
-    "rnn": ("xla:while(fused-gate gemm)", "scan-gemm"),
-    "softmax": ("pallas:online-softmax", "rowreduce"),
-    "lrn": ("pallas:banded-matmul (MXU)", "band-gemm"),
+    "activation": ("xla:relu-fusion", None, "elementwise"),
+    "pooling": ("xla:reshape-mean", "pallas:avgpool reshape-reduce", "reduce"),
+    "batchnorm": ("xla:bn-fusion", None, "stats+scale"),
+    "connected": ("xla:dot (MXU)", "pallas:matmul (MXU)", "gemm"),
+    "convolution_xla": ("xla:conv (MXU)", None, "conv"),
+    "convolution_im2col": ("xla:dot via im2col", "pallas:matmul via im2col", "gemm"),
+    "dropout": ("xla:threefry fusion", None, "prng+mask"),
+    "rnn": ("xla:while(fused-gate gemm)", None, "scan-gemm"),
+    "softmax": ("xla:rowreduce fusion", "pallas:online-softmax", "rowreduce"),
+    "lrn": ("xla:banded-matmul fusion", "pallas:banded-matmul (MXU)", "band-gemm"),
 }
 
 
 def rows(preset: int = 1) -> list[Row]:
-    # Characterize-only flow through the shared engine: compiled executables
-    # are cached alongside the fig3/fig4 runs of the same preset.
-    plan = ExecutionPlan(preset=preset)
     out: list[Row] = []
-    for name, (kernel, kind) in _KERNEL_MAP.items():
+    for name, (xla_kernel, pallas_kernel, kind) in _KERNEL_MAP.items():
         spec = get_benchmark(name)
-        w = spec.build_preset(plan.resolve_preset(spec))
-        for backward in (False, True):
-            if backward and w.fn_bwd is None:
-                continue
-            info = DEFAULT_ENGINE.characterize(spec, plan, backward=backward, workload=w)
-            r = info.roofline
-            out.append(
-                (
-                    f"table2.{name}{'.bwd' if backward else ''}",
-                    0.0,
-                    f"kernel={kernel};class={kind};dominant={r.dominant};"
-                    f"ai={r.arithmetic_intensity():.2f};"
-                    f"flops={r.flops:.3e};bytes={r.hbm_bytes:.3e}",
+        impls = ("xla",) if pallas_kernel is None else ("xla", "pallas")
+        for impl in impls:
+            plan = ExecutionPlan(preset=preset, impl=impl)
+            w = spec.build_preset(plan.resolve_preset(spec))
+            kernel = pallas_kernel if impl == "pallas" else xla_kernel
+            for backward in (False, True):
+                if backward and (w.fn_bwd is None or impl == "pallas"):
+                    continue
+                info = DEFAULT_ENGINE.characterize(
+                    spec, plan, backward=backward, workload=w
                 )
-            )
+                r = info.roofline
+                suffix = ".pallas" if impl == "pallas" else ""
+                out.append(
+                    (
+                        f"table2.{name}{suffix}{'.bwd' if backward else ''}",
+                        0.0,
+                        f"kernel={kernel};class={kind};impl={impl};"
+                        f"dominant={r.dominant};"
+                        f"ai={r.arithmetic_intensity():.2f};"
+                        f"flops={r.flops:.3e};bytes={r.hbm_bytes:.3e}",
+                    )
+                )
     return out

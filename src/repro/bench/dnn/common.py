@@ -35,6 +35,7 @@ def dnn_workload(
     validate: Callable | None = None,
     diff_argnums: tuple[int, ...] | None = None,
     batch_dims: tuple[int | None, ...] | None = None,
+    pallas_kernel: str | None = None,
 ) -> Workload:
     def loss(*args):
         return _mean_of_outputs(fn(*args))
@@ -66,5 +67,6 @@ def dnn_workload(
         fn_bwd=grad_fn,
         flops_bwd=flops_bwd if flops_bwd is not None else 2.0 * flops,
         batch_dims=batch_dims,
+        pallas_kernel=pallas_kernel,
         meta={"dnn": True},
     )

@@ -46,6 +46,7 @@ def _make(batch: int, din: int, dout: int):
         flops=2.0 * batch * din * dout,
         bytes_moved=4.0 * (batch * din + din * dout + batch * dout),
         validate=validate,
+        pallas_kernel="matmul",
     )
 
 

@@ -77,6 +77,10 @@ def _make(n: int, c: int, hw: int, o: int, k: int, impl: str):
         flops=flops,
         bytes_moved=4.0 * (n * c * hw * hw + o * c * k * k + n * o * oh * oh),
         validate=validate,
+        # Only the im2col variant routes through the kernel layer; the xla
+        # variant is lax.conv by definition (this spec's own `impl` preset
+        # key is the conv algorithm, orthogonal to the plan's impl axis).
+        pallas_kernel="matmul" if impl == "im2col" else None,
     )
 
 

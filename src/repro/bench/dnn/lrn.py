@@ -40,6 +40,7 @@ def _make(n: int, c: int, hw: int):
         flops=numel * (2 * c + 6),  # banded matmul dominates
         bytes_moved=numel * 8,
         validate=validate,
+        pallas_kernel="lrn",
     )
 
 

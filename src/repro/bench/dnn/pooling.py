@@ -40,6 +40,7 @@ def _make(n: int, c: int, hw: int, ksize: int):
         flops=numel,
         bytes_moved=numel * 4 * (1 + 1 / ksize**2),
         validate=validate,
+        pallas_kernel="avgpool",
     )
 
 

@@ -35,6 +35,7 @@ def _make(batch: int, classes: int):
         flops=numel * 5,
         bytes_moved=numel * 8,
         validate=validate,
+        pallas_kernel="softmax",
     )
 
 

@@ -46,6 +46,7 @@ def _make(n: int, chain: int, dtype: str) -> Workload:
         # Data-parallel over a's rows: every chain step is (rows, n) @ (n, n)
         # with b replicated, so shards never exchange data.
         batch_dims=(0, None),
+        pallas_kernel="matmul",
     )
 
 

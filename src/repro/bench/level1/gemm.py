@@ -44,6 +44,7 @@ def _make(n: int, dtype: str, transpose: str) -> Workload:
         flops=2.0 * n**3,
         bytes_moved=3.0 * n * n * jnp.dtype(dt).itemsize,
         batch_dims=batch_dims,
+        pallas_kernel="matmul",
     )
 
 

@@ -52,6 +52,7 @@ def _make(n: int) -> Workload:
         # Opt out: bitonic stages compare-exchange across the full array
         # (global reshape-swaps), so there is no independent batch dim.
         batch_dims=None,
+        pallas_kernel="sort_kv",
     )
 
 

@@ -60,6 +60,7 @@ def _make(n: int, iters: int, fused: bool = True) -> Workload:
         # Opt out: the diffusion stencil needs halos each iteration and the
         # q0 statistics couple the whole image.
         batch_dims=None,
+        pallas_kernel="srad_step",
     )
 
 

@@ -64,6 +64,7 @@ def _make(n: int, fields: int) -> Workload:
         # Opt out: the compaction scatters records to prefix-sum offsets
         # that depend on every earlier record (global scan, global writes).
         batch_dims=None,
+        pallas_kernel="prefix_scan",
     )
 
 

@@ -1,4 +1,4 @@
-"""Staged execution engine: build → place → compile → measure →
+"""Staged execution engine: build → place → [tune] → compile → measure →
 characterize → report.
 
 The imperative half of the plan/engine split (``core/plan.py`` holds the
@@ -15,11 +15,23 @@ declarative half). For every selected benchmark the engine runs the stages:
   neither the timer nor the serve stage ever pays per-call H2D transfer
   (``no_jit`` host-transfer workloads opt out: staging *is* their
   measurement).
+- **tune** (only for ``impl="pallas"`` plans with ``tune=True``): sweep
+  the declared kernel's ``tune_space()`` block/grid candidates, compiling
+  each through the same cache and timing it with the windowed timer; the
+  winner's params join the compile-cache key and persist in the HLO disk
+  cache next to the executable, so a warm ``--tune`` run restores the
+  winner and performs **zero trials and zero compiles**.
 - **compile**: lower + compile through an in-process cache keyed on
-  ``(name, preset, overrides, backward, backend, devices, placement)`` so
-  each workload is compiled **exactly once per (pass, placement)** — the
-  sharded and replicated lowerings are distinct executables, and the same
-  executable feeds both the timer and the static analysis.
+  ``(name, preset, overrides, backward, backend, devices, placement,
+  impl, tuned-params)`` so each workload is compiled **exactly once per
+  (pass, placement, implementation)** — the sharded and replicated (and
+  xla and pallas) lowerings are distinct executables, and the same
+  executable feeds both the timer and the static analysis. The plan's
+  ``impl`` axis resolves per workload (a pallas plan falls back to xla
+  for workloads with no declared ``pallas_kernel``, recorded in
+  ``impl_fallback``) and is realized by tracing under
+  ``kernels.ops.force_impl`` — the kernel-vs-oracle choice is baked into
+  the lowering, not dispatched per call.
 - **measure**: validate the first output, then time the compiled
   executable (``harness.time_fn``) in sync mode (``us_per_call``, the
   comparable number) and — when ``plan.timing_window > 1`` — in windowed
@@ -61,8 +73,10 @@ engine).
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import os
+import time
 from typing import Any, Callable
 
 import jax
@@ -87,8 +101,9 @@ from repro.core.results import (
 
 __all__ = ["CompileCache", "Engine", "RunResult", "SweepStat"]
 
-# (name, preset, frozen-overrides, backward, backend, devices, placement)
-CacheKey = tuple[str, int, tuple, bool, str, int, str]
+# (name, preset, frozen-overrides, backward, backend, devices, placement,
+#  impl, frozen-tuned-params)
+CacheKey = tuple[str, int, tuple, bool, str, int, str, str, tuple]
 
 
 @dataclasses.dataclass
@@ -183,6 +198,8 @@ class Engine:
         preset: int,
         backward: bool,
         placement: Placement,
+        impl: str = "xla",
+        tuned_params: dict | None = None,
     ) -> CacheKey:
         return (
             spec.name,
@@ -192,7 +209,37 @@ class Engine:
             jax.default_backend(),
             placement.devices,
             placement.mode,
+            impl,
+            tuple(sorted((tuned_params or {}).items())),
         )
+
+    def _resolve_impl(
+        self, workload: Workload, plan: ExecutionPlan, backward: bool
+    ) -> tuple[str, str | None]:
+        """The *effective* implementation for one (workload, pass):
+        ``(impl, fallback_reason)``. A pallas plan degrades to xla — with
+        the reason recorded, never silently — for workloads that declare
+        no Pallas variant, for host-transfer (no_jit) workloads, and for
+        backward passes (the hand-written kernels are forward programs;
+        differentiating through ``pallas_call`` is not the measured path).
+        """
+        if plan.impl != "pallas":
+            return "xla", None
+        if workload.meta.get("no_jit"):
+            return "xla", "no_jit"
+        if workload.pallas_kernel is None:
+            return "xla", "no_pallas_variant"
+        from repro.kernels import ops as kernel_ops
+
+        if workload.pallas_kernel not in kernel_ops.PALLAS_OPS:
+            raise ValueError(
+                f"workload {workload.name!r} declares pallas_kernel="
+                f"{workload.pallas_kernel!r}, not a known op: "
+                f"{sorted(kernel_ops.PALLAS_OPS)}"
+            )
+        if backward:
+            return "xla", "backward_pass"
+        return "pallas", None
 
     def _stage_build(
         self, spec: BenchmarkSpec, plan: ExecutionPlan, preset: int
@@ -237,6 +284,26 @@ class Engine:
         assert mode == placement.mode, (mode, placement)
         return placed, placement
 
+    def _impl_context(
+        self, workload: Workload, impl: str, tuned_params: dict | None
+    ):
+        """The forced-dispatch context tracing must run under.
+
+        Workloads that declare a ``pallas_kernel`` are *pinned* both ways:
+        ``impl="pallas"`` forces the kernel (with the tuned block params
+        merged in), ``impl="xla"`` forces the jnp reference — so an xla
+        row on a TPU host is really the lax lowering, not ``mode="auto"``
+        silently picking the kernel. Undeclared workloads trace untouched.
+        """
+        if workload.pallas_kernel is None:
+            return contextlib.nullcontext()
+        from repro.kernels import ops as kernel_ops
+
+        mode = "pallas" if impl == "pallas" else "ref"
+        return kernel_ops.force_impl(
+            mode, workload.pallas_kernel, **(tuned_params or {})
+        )
+
     def _stage_compile(
         self,
         spec: BenchmarkSpec,
@@ -246,11 +313,15 @@ class Engine:
         preset: int,
         backward: bool,
         placement: Placement,
+        impl: str = "xla",
+        tuned_params: dict | None = None,
     ) -> _CacheEntry:
         fn = workload.fn_bwd if backward else workload.fn
         if backward and fn is None:
             raise ValueError(f"workload {workload.name!r} has no backward pass")
-        key = self._cache_key(spec, plan, preset, backward, placement)
+        key = self._cache_key(
+            spec, plan, preset, backward, placement, impl, tuned_params
+        )
 
         def build() -> _CacheEntry:
             if workload.meta.get("no_jit"):
@@ -278,7 +349,12 @@ class Engine:
                 if loaded is not None:
                     executable, info = loaded
                     return _CacheEntry(executable=executable, info=info)
-            lowered = jax.jit(fn).lower(*args)
+            # The impl choice is a trace-time decision: force_impl is
+            # consulted by the kernel ops as fn traces, so the selected
+            # implementation (and its tuned blocks) is baked into this
+            # lowering — execution later needs no context.
+            with self._impl_context(workload, impl, tuned_params):
+                lowered = jax.jit(fn).lower(*args)
             compiled = lowered.compile()
             if use_disk:
                 self.disk_cache.store(
@@ -287,6 +363,82 @@ class Engine:
             return _CacheEntry(executable=compiled)
 
         return self.cache.lookup(key, build)
+
+    def _stage_tune(
+        self,
+        spec: BenchmarkSpec,
+        workload: Workload,
+        args: tuple,
+        plan: ExecutionPlan,
+        preset: int,
+        backward: bool,
+        placement: Placement,
+        impl: str,
+    ) -> tuple[dict | None, int | None, float | None]:
+        """Sweep the kernel's ``tune_space()`` -> (winner, trials, wall µs).
+
+        Runs between place and compile, only for effective-pallas passes of
+        tuning plans; every other pass returns ``(None, None, None)`` and
+        costs nothing. Candidates compile through the ordinary cache under
+        their full key — the winner's later compile stage is a guaranteed
+        hit — and are timed with the windowed timer (small kernels are
+        dispatch-bound; sync-mode timing would tune the host, not the
+        block shape). Ties keep the earliest candidate, so a fixed seed
+        and a deterministic timer give a deterministic winner. The winner
+        persists in the disk cache under the *base* key (params excluded —
+        the lookup must not need the answer), making a warm run's sweep
+        zero trials: restored, not re-timed.
+        """
+        if impl != "pallas" or not plan.tune:
+            return None, None, None
+        from repro.kernels import ops as kernel_ops
+
+        space = kernel_ops.tune_space(workload.pallas_kernel)
+        if not space:
+            space = ({},)
+        if len(space) == 1:
+            # Nothing to sweep (kernels without block params): the single
+            # candidate wins by default, at zero trials.
+            return dict(space[0]), 0, 0.0
+        base_key = self._cache_key(
+            spec, plan, preset, backward, placement, impl
+        )
+        use_disk = self.disk_cache is not None and placement.devices == 1
+        if use_disk:
+            won = self.disk_cache.load_tuned(base_key)
+            if won is not None:
+                return won, 0, 0.0
+        t0 = time.perf_counter()
+        best_us: float | None = None
+        best: dict = {}
+        trials = 0
+        for cand in space:
+            entry = self._stage_compile(
+                spec, workload, args, plan, preset, backward, placement,
+                impl, dict(cand),
+            )
+            mean_us = self._time_tune_trial(entry, args, plan)
+            trials += 1
+            if best_us is None or mean_us < best_us:
+                best_us, best = mean_us, dict(cand)
+        trials_us = (time.perf_counter() - t0) * 1e6
+        if use_disk:
+            self.disk_cache.store_tuned(base_key, best, trials, trials_us)
+        return best, trials, trials_us
+
+    def _time_tune_trial(
+        self, entry: _CacheEntry, args: tuple, plan: ExecutionPlan
+    ) -> float:
+        """One candidate's figure of merit (mean µs/call, windowed).
+        A seam: tests monkeypatch this to pin the sweep's timing."""
+        mean_us, _ = time_fn(
+            entry.executable,
+            args,
+            iters=min(plan.iters, 3),  # a sweep trial, not the measurement
+            warmup=1,
+            window=plan.timing_window,
+        )
+        return mean_us
 
     def _stage_measure(
         self,
@@ -499,11 +651,16 @@ class Engine:
         depends on the workload's ``batch_dims`` and input shapes — so a
         shard-mode lookup builds the workload (shapes only, no transfers)
         to resolve the key; inputs are placed on devices only on a miss.
+        Likewise the plan's ``impl`` resolves per workload, so a pallas
+        lookup also builds the workload first. Characterization always
+        analyses the kernel's *default* blocks (``plan.tune`` is a timing
+        concern; the static analysis does not sweep).
         """
         preset = plan.resolve_preset(spec)
         requested = plan.placement_at(plan.devices)
-        if requested.mode == "replicate":
-            # Effective == requested without building the workload.
+        if requested.mode == "replicate" and plan.impl == "xla":
+            # Effective placement/impl == requested without building the
+            # workload (xla is every workload's fallback).
             cached = self.cache.peek(
                 self._cache_key(spec, plan, preset, backward, requested)
             )
@@ -512,17 +669,18 @@ class Engine:
                 return cached.info
         if workload is None:
             workload = spec.build_preset(preset, **plan.overrides_for(spec.name))
+        impl, _ = self._resolve_impl(workload, plan, backward)
         args = workload.make_inputs(plan.seed)
         placement = self._resolve_placement(workload, args, requested)
         cached = self.cache.peek(
-            self._cache_key(spec, plan, preset, backward, placement)
+            self._cache_key(spec, plan, preset, backward, placement, impl)
         )
         if cached is not None and cached.info is not None:
             self.cache.hits += 1
             return cached.info
         args, placement = self._stage_place(workload, args, requested)
         entry = self._stage_compile(
-            spec, workload, args, plan, preset, backward, placement
+            spec, workload, args, plan, preset, backward, placement, impl
         )
         return self._stage_characterize(workload, entry, backward)
 
@@ -556,6 +714,8 @@ class Engine:
             device_sweep=plan.device_sweep,
             serve=plan.serve,
             timing_window=plan.timing_window,
+            impl=plan.impl,
+            tune=plan.tune,
         )
         writer = JsonlReportWriter(jsonl_path, metadata) if jsonl_path else None
         records: list[BenchmarkRecord] = []
@@ -652,10 +812,17 @@ class Engine:
         backward: bool,
         placement: Placement,
     ) -> list[BenchmarkRecord]:
-        stage = "compile"
+        stage = "tune"
+        impl, impl_fallback = "xla", None
         try:
+            impl, impl_fallback = self._resolve_impl(workload, plan, backward)
+            tuned_params, tune_trials, tune_trials_us = self._stage_tune(
+                spec, workload, args, plan, preset, backward, placement, impl
+            )
+            stage = "compile"
             entry = self._stage_compile(
-                spec, workload, args, plan, preset, backward, placement
+                spec, workload, args, plan, preset, backward, placement,
+                impl, tuned_params,
             )
             stage = "measure"
             timing = self._stage_measure(workload, entry, args, plan, backward)
@@ -664,6 +831,17 @@ class Engine:
             rec = BenchmarkRecord.from_measurement(
                 spec, preset, timing, info,
                 devices=placement.devices, placement=placement.mode,
+                impl=impl,
+                # Explicit interpret flag: a pallas row on a non-TPU host
+                # ran the kernel interpreted — a dispatch study, never a
+                # compiled-kernel number. None (not False) on xla rows.
+                impl_interpret=(
+                    jax.default_backend() != "tpu" if impl == "pallas" else None
+                ),
+                impl_fallback=impl_fallback,
+                tuned_params=tuned_params,
+                tune_trials=tune_trials,
+                tune_trials_us=tune_trials_us,
             )
             extra: list[BenchmarkRecord] = []
             # Serving measures request-level concurrency of the forward
@@ -687,6 +865,7 @@ class Engine:
                 BenchmarkRecord.from_error(
                     spec, preset, stage=stage, error=_err_text(e), backward=backward,
                     devices=placement.devices, placement=placement.mode,
+                    impl=impl,
                 )
             ]
 

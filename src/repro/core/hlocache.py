@@ -19,6 +19,15 @@ of what the compile stage produced, plus the static characterization
   the fallback when the executable blob is missing or no longer
   deserializes (toolchain drift).
 
+A third sidecar (``<key>.tune.json``, :meth:`store_tuned` /
+:meth:`load_tuned`) persists the engine's autotune winner — the Pallas
+block config ``_stage_tune`` selected — next to the executable it was
+selected for. It is keyed on the *base* compile-cache key (the one without
+tuned params folded in), so a warm ``--tune`` run restores the winner
+first, then loads the winner's executable: zero tune trials, zero
+compiles. The same versioned directory scopes it: an edited kernel or a
+new toolchain invalidates winners along with executables.
+
 Entries are versioned by ``jax.__version__``, ``jaxlib.__version__``, the
 backend, a topology token (device kind × device count — a serialized
 executable is compiled *for* a device), and a content hash of the
@@ -160,6 +169,9 @@ class HloDiskCache:
         self.skips = 0
         self.skip_reasons: list[str] = []  # capped at _MAX_REASONS
         self.last_skip: str | None = None
+        # Autotune-winner sidecar traffic (store_tuned / load_tuned).
+        self.tune_hits = 0  # winners restored (warm run: zero trials)
+        self.tune_stores = 0  # winners persisted
 
     def _path(self, key: tuple) -> str:
         digest = hashlib.sha256(repr(key).encode()).hexdigest()[:24]
@@ -200,7 +212,8 @@ class HloDiskCache:
             f"hlo_hits={self.hlo_hits} misses={self.misses} "
             f"stores={self.stores} exe_stores={self.exe_stores} "
             f"xla_compiles={self.xla_compiles} "
-            f"fallbacks={self.fallback_count} exe_fallbacks={self.exe_fallbacks}"
+            f"fallbacks={self.fallback_count} exe_fallbacks={self.exe_fallbacks} "
+            f"tune_hits={self.tune_hits} tune_stores={self.tune_stores}"
         )
         if self.skips:
             line += f" skips={self.skips} last_skip=[{self.last_skip}]"
@@ -209,6 +222,51 @@ class HloDiskCache:
         if self.last_fallback is not None:
             line += f" last_fallback=[{self.last_fallback}]"
         return line
+
+    def _tune_path(self, key: tuple) -> str:
+        return self._path(key)[: -len(".json")] + ".tune.json"
+
+    # -- autotune winners ----------------------------------------------------
+
+    def store_tuned(
+        self, key: tuple, params: dict, trials: int, trials_us: float
+    ) -> None:
+        """Persist the autotune stage's winning block config for ``key``
+        (the *base* compile-cache key, without the params folded in), plus
+        what the sweep cost — provenance for warm-run records."""
+        try:
+            payload = {
+                "format": _FORMAT_VERSION,
+                "params": dict(params),
+                "trials": int(trials),
+                "trials_us": float(trials_us),
+            }
+            path = self._tune_path(key)
+            tmp = path + ".tmp"
+            with open(tmp, "w") as f:
+                json.dump(payload, f)
+            os.replace(tmp, path)
+            self.tune_stores += 1
+        except Exception:  # noqa: BLE001 — persistence is advisory
+            return
+
+    def load_tuned(self, key: tuple) -> dict | None:
+        """Restore a persisted autotune winner, or None (cold / unusable).
+        A hit means the warm run skips the sweep entirely: zero trials."""
+        path = self._tune_path(key)
+        if not os.path.exists(path):
+            return None
+        try:
+            with open(path) as f:
+                payload = json.load(f)
+            if payload.get("format") != _FORMAT_VERSION:
+                raise ValueError("stale tune cache format")
+            params = {str(k): v for k, v in dict(payload["params"]).items()}
+        except Exception as e:  # noqa: BLE001 — unusable winner = re-sweep
+            self._note_fallback(key, e)
+            return None
+        self.tune_hits += 1
+        return params
 
     # -- store -------------------------------------------------------------
 

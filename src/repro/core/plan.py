@@ -37,9 +37,11 @@ __all__ = [
     "PLACEMENT_MODES",
     "SERVE_MODES",
     "SERVE_CLIENTS",
+    "IMPLS",
 ]
 
 PLACEMENT_MODES = ("replicate", "shard")
+IMPLS = ("xla", "pallas")
 SERVE_MODES = ("open", "closed")
 SERVE_CLIENTS = ("single", "threaded")
 
@@ -215,6 +217,17 @@ class ExecutionPlan:
     # ascending, deduplicated) under placement.mode, sharing the compile
     # cache across counts. None = just (placement.devices,).
     device_sweep: tuple[int, ...] | None = None
+    # Implementation axis: which lowering of each workload to compile and
+    # time. "xla" (default) traces the jnp/lax path; "pallas" traces the
+    # hand-written kernel for workloads that declare one (pallas_kernel on
+    # the Workload — registry.py impl contract), with a recorded fallback
+    # to xla otherwise. Part of the compile-cache key, like placement.
+    impl: str = "xla"
+    # Autotune: sweep each Pallas kernel's tune_space() in a stage between
+    # place and compile, timing candidates with the windowed timer; the
+    # winner persists in the HLO disk cache so warm runs skip the sweep.
+    # No-op for impl="xla" (there is nothing to tune on the lax path).
+    tune: bool = False
     # Serve the selection under generated load after measuring it: a frozen
     # ServeSpec (mode/qps/concurrency/lanes/duration/colocate), or None for
     # isolation-only runs (the pre-serve behaviour).
@@ -242,6 +255,8 @@ class ExecutionPlan:
                 f"timing_window must be >= 1 (1 = sync-only), "
                 f"got {self.timing_window}"
             )
+        if self.impl not in IMPLS:
+            raise PlanError(f"impl must be one of {IMPLS}, got {self.impl!r}")
         if self.serve is not None and not isinstance(self.serve, ServeSpec):
             raise PlanError(f"serve must be a ServeSpec, got {self.serve!r}")
         self._resolve_placement()

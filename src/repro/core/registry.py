@@ -33,6 +33,27 @@ the engine partitions inputs across the data mesh using the workload's
   sharded and a replicated execution of the same workload agree
   numerically. Dims that do not divide the device count are replicated
   silently; pick preset sizes that divide common device counts (2, 4, 8).
+
+**The ``impl`` contract (for benchmark authors).** Plans carry an
+``impl ∈ {"xla", "pallas"}`` axis selecting which implementation the engine
+compiles and times:
+
+- A benchmark opts in by setting ``pallas_kernel`` on its Workload to the
+  name of the ``repro.kernels.ops`` entry point its ``fn`` calls (e.g.
+  ``"matmul"``; see ``ops.PALLAS_OPS`` for the valid names). The fn itself
+  keeps calling the op with the default ``mode="auto"`` — the engine wraps
+  tracing in ``ops.force_impl`` so the declared kernel (or the jnp
+  reference) is baked into the lowered program.
+- ``pallas_kernel=None`` (the default) means the workload has no Pallas
+  variant; ``--impl pallas`` plans fall back to XLA for it and the record
+  says ``impl=xla`` with ``impl_fallback`` naming the reason.
+- The kernel's tune space is the kernel module's exported ``tune_space()``
+  (reached via ``ops.tune_space(pallas_kernel)``); ``--tune`` plans sweep
+  those candidates in the engine's tune stage and the winning block config
+  is persisted next to the executable in the HLO disk cache.
+- Like ``batch_dims``, the declaration is semantic: both implementations
+  must compute the same function (tests pin pallas-vs-xla agreement
+  against the ``kernels/ref.py`` oracles).
 """
 
 from __future__ import annotations
@@ -64,7 +85,9 @@ class Workload:
     the two are cross-checked in tests). ``validate`` optionally checks
     outputs for correctness (the suite runs it once, outside timing).
     ``batch_dims`` declares the per-input data-parallel dims for sharded
-    placements — see the module docstring for the contract.
+    placements, and ``pallas_kernel`` names the workload's hand-written
+    kernel entry point for the ``impl`` axis — see the module docstring for
+    both contracts.
     """
 
     name: str
@@ -79,6 +102,9 @@ class Workload:
     # Per-input batch dim (None entry = replicate that input); None for the
     # whole field = non-batchable, sharded plans fall back to replicate.
     batch_dims: tuple[int | None, ...] | None = None
+    # Name of the repro.kernels.ops entry point fn calls (impl contract);
+    # None = no Pallas variant, pallas plans fall back to xla for this row.
+    pallas_kernel: str | None = None
     meta: dict = dataclasses.field(default_factory=dict)
 
     @property

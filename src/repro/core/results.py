@@ -50,7 +50,14 @@ __all__ = [
 #     synchronization), timing_window, timer_dispatch_us (sync − windowed,
 #     the per-call dispatch+sync overhead sync mode folds in); RunMetadata
 #     carries the plan's timing_window.
-SCHEMA_VERSION = 5
+# v6: implementation axis — impl (xla|pallas, the lowering actually timed),
+#     impl_interpret (pallas ran in interpret mode — non-TPU hosts; such
+#     rows are dispatch studies, not compiled-kernel numbers),
+#     impl_fallback (why a pallas plan fell back to xla for this row),
+#     tuned_params / tune_trials / tune_trials_us (the autotune stage's
+#     winning block config and what the sweep cost); RunMetadata carries
+#     the plan's impl and tune flags.
+SCHEMA_VERSION = 6
 
 
 class ReportError(ValueError):
@@ -90,6 +97,16 @@ class BenchmarkRecord:
     device throughput for dispatch-bound kernels), and
     ``timer_dispatch_us`` is their difference — the measured per-call
     host dispatch + sync overhead.
+
+    Schema v6 adds the implementation axis: ``impl`` is the lowering this
+    row actually timed (``xla`` or ``pallas`` — the *effective* choice;
+    a pallas plan over a workload with no Pallas variant reads ``xla``
+    and ``impl_fallback`` says why). ``impl_interpret=True`` flags pallas
+    rows that ran the kernel in interpret mode (non-TPU hosts) so CPU CI
+    rows are never mistaken for compiled-kernel numbers. ``tuned_params``
+    / ``tune_trials`` / ``tune_trials_us`` report the autotune stage:
+    the winning block config, how many candidates were timed (0 = winner
+    restored from the disk cache), and the sweep's wall-clock cost.
     """
 
     name: str
@@ -114,6 +131,15 @@ class BenchmarkRecord:
     us_per_call_windowed: float | None = None
     timing_window: int | None = None
     timer_dispatch_us: float | None = None  # sync − windowed, clamped at 0
+    # Implementation axis (schema v6). impl is the *effective* lowering;
+    # pre-v6 rows loaded from disk read the default "xla", which is what
+    # they were.
+    impl: str = "xla"
+    impl_interpret: bool | None = None  # pallas ran interpret (non-TPU host)
+    impl_fallback: str | None = None  # why a pallas plan fell back to xla
+    tuned_params: dict | None = None  # autotune winner (None = not tuned)
+    tune_trials: int | None = None  # candidates timed (0 = cache restore)
+    tune_trials_us: float | None = None  # sweep wall-clock cost
     # Serving columns (schema v3) — None unless the plan had a ServeSpec.
     serve_mode: str | None = None
     serve_lanes: int | None = None
@@ -216,6 +242,12 @@ class BenchmarkRecord:
         *,
         devices: int = 1,
         placement: str = "replicate",
+        impl: str = "xla",
+        impl_interpret: bool | None = None,
+        impl_fallback: str | None = None,
+        tuned_params: dict | None = None,
+        tune_trials: int | None = None,
+        tune_trials_us: float | None = None,
     ) -> "BenchmarkRecord":
         r = compiled.roofline
         bound = r.bound_s if r.bound_s > 0 else 1.0
@@ -240,6 +272,12 @@ class BenchmarkRecord:
             us_per_call_windowed=timing.us_per_call_windowed,
             timing_window=timing.timing_window,
             timer_dispatch_us=timing.timer_dispatch_us,
+            impl=impl,
+            impl_interpret=impl_interpret,
+            impl_fallback=impl_fallback,
+            tuned_params=tuned_params,
+            tune_trials=tune_trials,
+            tune_trials_us=tune_trials_us,
         )
 
     @classmethod
@@ -253,6 +291,7 @@ class BenchmarkRecord:
         backward: bool = False,
         devices: int = 1,
         placement: str = "replicate",
+        impl: str = "xla",
     ) -> "BenchmarkRecord":
         return cls(
             name=spec.name + (".bwd" if backward else ""),
@@ -271,6 +310,7 @@ class BenchmarkRecord:
             error=error,
             devices=devices,
             placement=placement,
+            impl=impl,
         )
 
     @classmethod
@@ -289,6 +329,21 @@ class BenchmarkRecord:
             eff += (
                 f";win_us={self.us_per_call_windowed:.2f}"
                 f";timer_dispatch_us={self.timer_dispatch_us:.2f}"
+            )
+        imp = ""
+        if self.impl != "xla" or self.impl_fallback is not None:
+            imp = f";impl={self.impl}"
+            if self.impl_interpret:
+                imp += ";interpret=1"
+            if self.impl_fallback is not None:
+                imp += f";impl_fallback={self.impl_fallback}"
+        if self.tuned_params is not None:
+            tuned = "/".join(
+                f"{k}={v}" for k, v in sorted(self.tuned_params.items())
+            )
+            imp += (
+                f";tuned={tuned or 'default'};tune_trials={self.tune_trials};"
+                f"tune_us={self.tune_trials_us:.0f}"
             )
         serve = ""
         if self.serve_mode is not None:
@@ -324,7 +379,7 @@ class BenchmarkRecord:
             )
         return (
             f"{self.name},{self.us_per_call:.2f},{self.devices},"
-            f"{self.placement},{self.derived}{eff}{serve}"
+            f"{self.placement},{self.derived}{eff}{imp}{serve}"
         )
 
 
@@ -342,6 +397,8 @@ class RunMetadata:
     device_sweep: tuple[int, ...] = (1,)
     serve: ServeSpec | None = None
     timing_window: int = 1  # 1 = sync-only (pre-v5 runs)
+    impl: str = "xla"  # the plan's requested implementation axis
+    tune: bool = False  # whether the autotune stage was enabled
 
     def __post_init__(self) -> None:
         # JSON round-trips tuples as lists and nested dataclasses as dicts;
@@ -366,6 +423,8 @@ class RunMetadata:
         device_sweep: tuple[int, ...] | None = None,
         serve: ServeSpec | None = None,
         timing_window: int = 1,
+        impl: str = "xla",
+        tune: bool = False,
     ) -> "RunMetadata":
         import jax
 
@@ -379,6 +438,8 @@ class RunMetadata:
             device_sweep=device_sweep if device_sweep is not None else (devices,),
             serve=serve,
             timing_window=timing_window,
+            impl=impl,
+            tune=tune,
         )
 
 

@@ -37,6 +37,14 @@ additionally measures with K calls in flight per synchronization, riding
 async dispatch, filling ``us_per_call_windowed`` and the derived per-call
 dispatch overhead — the accurate-kernel-time story for small kernels on
 an async runtime.
+
+Implementation flags: ``--impl {xla,pallas}`` picks which lowering to
+compile and time — the lax/XLA path (default) or the hand-written Pallas
+kernel for workloads that declare one (others fall back to xla with the
+reason recorded in the row); ``--tune`` sweeps each kernel's block/grid
+tune space before compiling and times the winner (the winning config
+persists in ``--cache-dir``, so a warm tuned run performs zero trials
+and zero compiles).
 """
 
 from __future__ import annotations
@@ -47,6 +55,7 @@ from typing import Any, Mapping, Sequence
 
 from repro.core.engine import Engine
 from repro.core.plan import (
+    IMPLS,
     PLACEMENT_MODES,
     SERVE_CLIENTS,
     SERVE_MODES,
@@ -106,6 +115,8 @@ def run_suite(
     placement: str = "replicate",
     scale_devices: Sequence[int] | None = None,
     serve: ServeSpec | None = None,
+    impl: str = "xla",
+    tune: bool = False,
     report_path: str | None = None,
     jsonl_path: str | None = None,
     verbose: bool = True,
@@ -128,6 +139,8 @@ def run_suite(
         placement=Placement(devices=devices, mode=placement),
         device_sweep=tuple(scale_devices) if scale_devices is not None else None,
         serve=serve,
+        impl=impl,
+        tune=tune,
         **plan_kwargs,
     )
     result = (engine or DEFAULT_ENGINE).run(
@@ -265,6 +278,19 @@ def main(argv: Sequence[str] | None = None) -> int:
                     help="latency SLO in microseconds; rows gain "
                          "goodput_qps (completions with latency <= SLO "
                          "per second; latency == SLO counts as good)")
+    ap.add_argument("--impl", choices=IMPLS, default="xla",
+                    help="implementation to compile and time: the lax/XLA "
+                         "lowering (xla, default) or the hand-written "
+                         "Pallas kernel (pallas) for workloads that declare "
+                         "one — others fall back to xla with the reason in "
+                         "the row (interpret mode on non-TPU hosts, flagged "
+                         "impl_interpret)")
+    ap.add_argument("--tune", action="store_true",
+                    help="sweep each Pallas kernel's block/grid tune space "
+                         "before compiling (windowed-timer trials); the "
+                         "winner joins the record (tuned_params) and "
+                         "persists in --cache-dir so warm runs skip the "
+                         "sweep entirely")
     ap.add_argument("--colocate", type=str, default=None, metavar="NAME",
                     help="co-locate every served workload with this "
                          "benchmark and record slowdown-vs-isolated "
@@ -327,6 +353,8 @@ def _run_cli(args, engine: Engine | None = None) -> list[BenchmarkRecord]:
         placement=args.placement,
         scale_devices=_parse_scale_devices(args.scale_devices),
         serve=_parse_serve(args),
+        impl=args.impl,
+        tune=args.tune,
         include_backward=not args.no_backward,
         report_path=args.report,
         jsonl_path=args.jsonl,

@@ -15,7 +15,12 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["avgpool_pallas"]
+__all__ = ["avgpool_pallas", "tune_space"]
+
+
+def tune_space() -> tuple[dict, ...]:
+    """Autotune candidates (first entry = the kernel's defaults)."""
+    return ({"block_c": 8}, {"block_c": 16}, {"block_c": 32})
 
 
 def _avgpool_kernel(x_ref, o_ref, *, ksize: int):

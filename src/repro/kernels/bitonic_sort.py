@@ -18,7 +18,12 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["bitonic_sort_pallas"]
+__all__ = ["bitonic_sort_pallas", "tune_space"]
+
+
+def tune_space() -> tuple[dict, ...]:
+    """No block parameters: the network shape is fixed by N (single entry)."""
+    return ({},)
 
 
 def _stage(keys, vals, j: int, dir_up_vec):

@@ -23,7 +23,16 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["flash_attention_pallas"]
+__all__ = ["flash_attention_pallas", "tune_space"]
+
+
+def tune_space() -> tuple[dict, ...]:
+    """Autotune candidates (first entry = the kernel's defaults)."""
+    return (
+        {"block_q": 128, "block_k": 128},
+        {"block_q": 256, "block_k": 128},
+        {"block_q": 128, "block_k": 256},
+    )
 
 _NEG_INF = -1e30
 

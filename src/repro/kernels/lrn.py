@@ -17,7 +17,12 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["lrn_pallas"]
+__all__ = ["lrn_pallas", "tune_space"]
+
+
+def tune_space() -> tuple[dict, ...]:
+    """Autotune candidates (first entry = the kernel's defaults)."""
+    return ({"block_s": 512}, {"block_s": 256}, {"block_s": 1024})
 
 
 def _lrn_kernel(x_ref, band_ref, o_ref, *, alpha: float, beta: float, k: float):

@@ -17,7 +17,22 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["matmul_pallas"]
+__all__ = ["matmul_pallas", "tune_space"]
+
+
+def tune_space() -> tuple[dict, ...]:
+    """Autotune candidates (first entry = the kernel's defaults).
+
+    Oversized blocks are safe: the wrapper clamps each block to the actual
+    dim (``min(block, dim)``) and pads, so one space serves every preset.
+    """
+    return (
+        {"block_m": 128, "block_n": 128, "block_k": 128},
+        {"block_m": 256, "block_n": 128, "block_k": 128},
+        {"block_m": 128, "block_n": 256, "block_k": 128},
+        {"block_m": 128, "block_n": 128, "block_k": 256},
+        {"block_m": 256, "block_n": 256, "block_k": 128},
+    )
 
 
 def _matmul_kernel(a_ref, b_ref, o_ref, acc_ref, *, k_steps: int):

@@ -16,7 +16,12 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["prefix_scan_pallas"]
+__all__ = ["prefix_scan_pallas", "tune_space"]
+
+
+def tune_space() -> tuple[dict, ...]:
+    """Autotune candidates (first entry = the kernel's defaults)."""
+    return ({"block_n": 2048}, {"block_n": 1024}, {"block_n": 4096})
 
 
 def _scan_kernel(x_ref, o_ref, carry_ref):

@@ -15,7 +15,17 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["softmax_pallas"]
+__all__ = ["softmax_pallas", "tune_space"]
+
+
+def tune_space() -> tuple[dict, ...]:
+    """Autotune candidates (first entry = the kernel's defaults)."""
+    return (
+        {"block_rows": 256, "block_cols": 512},
+        {"block_rows": 128, "block_cols": 512},
+        {"block_rows": 512, "block_cols": 256},
+        {"block_rows": 256, "block_cols": 1024},
+    )
 
 _NEG_INF = -1e30
 

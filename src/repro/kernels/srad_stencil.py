@@ -23,7 +23,12 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["srad_step_fused", "srad_step_split"]
+__all__ = ["srad_step_fused", "srad_step_split", "tune_space"]
+
+
+def tune_space() -> tuple[dict, ...]:
+    """No block parameters: the stencil runs as one whole-image block."""
+    return ({},)
 
 
 def _gradients(img):

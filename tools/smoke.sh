@@ -19,10 +19,18 @@
 # XLA compilations, zero fallbacks (the printed hlocache counters are
 # parsed and checked) — and produced only ok records.
 #
+# With --impl [IMPL], instead run the implementation-axis smoke (default
+# pallas; interpret mode off-TPU): a kernel-backed slice under
+# --impl/--tune/--cache-dir twice, asserting cold rows carry
+# impl/tuned_params/tune_trials>0 and the warm run restored every tuned
+# winner AND every executable — zero XLA compiles, zero tune trials.
+#
 # With --bench [PATH], instead write the perf-trajectory artifact
-# (default artifacts/BENCH_5.json): suite wall time cold vs warm under
-# --cache-dir, per-benchmark sync + windowed per-call microseconds, and
-# the warm run's cache counters, so future PRs have a baseline.
+# (default artifacts/BENCH_6.json): per-workload xla vs pallas vs
+# tuned-pallas per-call microseconds over the kernel-backed slice, the
+# tuned run's wall time cold vs warm under --cache-dir, and the warm
+# run's cache counters (zero compiles, zero tune trials), so future PRs
+# have a baseline.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -185,8 +193,68 @@ PY
   exit 0
 fi
 
+if [[ "${1:-}" == "--impl" ]]; then
+  impl="${2:-pallas}"
+  cache="$out/cache"
+
+  python -m repro.core.suite \
+    --names gemm_f32_nn softmax where --preset 0 --iters 1 --warmup 0 \
+    --no-backward --impl "$impl" --tune --cache-dir "$cache" \
+    --jsonl "$out/impl_cold.jsonl" 2> "$out/impl_cold.err" \
+    || { cat "$out/impl_cold.err" >&2; exit 1; }
+  grep '^# hlocache:' "$out/impl_cold.err"
+  python -m repro.core.suite \
+    --names gemm_f32_nn softmax where --preset 0 --iters 1 --warmup 0 \
+    --no-backward --impl "$impl" --tune --cache-dir "$cache" \
+    --jsonl "$out/impl_warm.jsonl" 2> "$out/impl_warm.err" \
+    || { cat "$out/impl_warm.err" >&2; exit 1; }
+  grep '^# hlocache:' "$out/impl_warm.err"
+
+  python - "$out/impl_cold.jsonl" "$out/impl_warm.jsonl" "$out/impl_warm.err" "$impl" <<'PY'
+import re
+import sys
+
+from repro.core.results import load_run
+
+cold_meta, cold = load_run(sys.argv[1])
+warm_meta, warm = load_run(sys.argv[2])
+impl = sys.argv[4]
+with open(sys.argv[3]) as f:
+    (line,) = [l for l in f if l.startswith("# hlocache:")]
+counters = {k: int(v) for k, v in re.findall(r"(\w+)=(\d+)", line)}
+
+for meta in (cold_meta, warm_meta):
+    assert meta is not None and meta.schema_version >= 6, meta
+    assert meta.impl == impl and meta.tune is True, (meta.impl, meta.tune)
+for tag, records in (("cold", cold), ("warm", warm)):
+    bad = [r for r in records if r.status != "ok"]
+    for r in bad:
+        print(f"ERROR {r.name}: {r.error}", file=sys.stderr)
+    assert not bad, f"{len(bad)} error records in the {tag} impl run"
+    for r in records:
+        assert r.impl == impl and r.impl_fallback is None, (r.name, r.impl)
+        if impl == "pallas":
+            assert r.impl_interpret is not None, r.name
+            assert r.tuned_params, (r.name, "no tuned_params")
+# Cold run actually swept the tune space; warm run restored every winner
+# from the .tune.json sidecar (zero trials) and every executable from the
+# serialized tier (zero XLA compiles).
+assert sum(r.tune_trials or 0 for r in cold) > 0, "cold run swept nothing"
+assert all((r.tune_trials or 0) == 0 for r in warm), "warm run re-tuned"
+assert counters["misses"] == 0 and counters["xla_compiles"] == 0, line
+assert counters["tune_hits"] == len(warm), line
+won = {r.name: r.tuned_params for r in warm}
+assert won == {r.name: r.tuned_params for r in cold}, "winners drifted"
+trials = sum(r.tune_trials or 0 for r in cold)
+print(f"impl smoke [{impl}]: {len(warm)} records, cold swept {trials} "
+      f"trials, warm restored {counters['tune_hits']} winners with "
+      "0 XLA compiles and 0 tune trials")
+PY
+  exit 0
+fi
+
 if [[ "${1:-}" == "--bench" ]]; then
-  bench_path="${2:-artifacts/BENCH_5.json}"
+  bench_path="${2:-artifacts/BENCH_6.json}"
   cache="$out/cache"
 
   python - "$cache" "$out" "$bench_path" <<'PY'
@@ -198,28 +266,36 @@ import sys
 import time
 
 cache, out, bench_path = sys.argv[1:4]
-cmd = [
-    sys.executable, "-m", "repro.core.suite",
-    "--levels", "0", "1", "--preset", "0", "--iters", "1", "--warmup", "0",
-    "--no-backward", "--cache-dir", cache,
+NAMES = ["gemm_f32_nn", "softmax", "lrn", "pooling", "where"]
+base = [
+    sys.executable, "-m", "repro.core.suite", "--names", *NAMES,
+    "--preset", "0", "--iters", "2", "--warmup", "1", "--no-backward",
 ]
 
 
-def run(tag):
+def run(tag, extra):
     t0 = time.time()
     proc = subprocess.run(
-        cmd + ["--jsonl", f"{out}/{tag}.jsonl"],
+        base + extra + ["--jsonl", f"{out}/{tag}.jsonl"],
         capture_output=True, text=True, env=dict(os.environ),
     )
     wall = time.time() - t0
     sys.stderr.write(proc.stderr)
     assert proc.returncode == 0, f"{tag} run failed rc={proc.returncode}"
-    (line,) = [l for l in proc.stderr.splitlines() if l.startswith("# hlocache:")]
+    # Only --cache-dir runs print an hlocache summary line.
+    lines = [l for l in proc.stderr.splitlines() if l.startswith("# hlocache:")]
+    line = lines[0] if lines else ""
     return wall, {k: int(v) for k, v in re.findall(r"(\w+)=(\d+)", line)}, line
 
-wall_cold, cold, _ = run("cold")
-wall_warm, warm, warm_line = run("warm")
+# The three implementation columns, plus a warm rerun of the tuned column
+# to pin the zero-compile/zero-trial property in the artifact.
+run("xla", ["--impl", "xla"])
+run("pallas", ["--impl", "pallas"])
+tuned = ["--impl", "pallas", "--tune", "--cache-dir", cache]
+wall_cold, _, _ = run("tuned_cold", tuned)
+wall_warm, warm, warm_line = run("tuned_warm", tuned)
 assert warm["misses"] == 0 and warm["xla_compiles"] == 0, warm_line
+assert warm["tune_hits"] > 0, warm_line
 if wall_warm >= wall_cold:
     # Wall clock on a shared host is advisory; the zero-compile property
     # above is the hard check. Record the anomaly instead of failing.
@@ -228,32 +304,38 @@ if wall_warm >= wall_cold:
 
 from repro.core.results import load_run  # after the subprocess runs: no jax cost
 
-meta, records = load_run(f"{out}/warm.jsonl")
+
+def by_name(tag):
+    _, records = load_run(f"{out}/{tag}.jsonl")
+    ok = {r.name: r for r in records if r.status == "ok"}
+    assert len(ok) == len(NAMES), f"{tag}: {sorted(ok)} vs {NAMES}"
+    return ok
+
+xla, pallas, tuned_warm = by_name("xla"), by_name("pallas"), by_name("tuned_warm")
+assert all((r.tune_trials or 0) == 0 for r in tuned_warm.values()), "warm re-tuned"
+meta, _ = load_run(f"{out}/tuned_warm.jsonl")
 bench = {
-    "bench": "BENCH_5",
-    "what": "zero-compile warm starts + windowed timing hot path",
-    "selection": "levels 0,1 preset 0 iters 1 forward-only",
+    "bench": "BENCH_6",
+    "what": "impl axis: xla vs pallas vs tuned pallas (autotuned blocks)",
+    "selection": f"names {','.join(NAMES)} preset 0 iters 2 forward-only",
     "backend": meta.backend,
     "jax_version": meta.jax_version,
     "device_count": meta.device_count,
-    "timing_window": meta.timing_window,
-    "suite_wall_s_cold": round(wall_cold, 3),
-    "suite_wall_s_warm": round(wall_warm, 3),
-    "warm_speedup": round(wall_cold / wall_warm, 2),
+    "interpret_mode": any(r.impl_interpret for r in pallas.values()),
+    "tuned_wall_s_cold": round(wall_cold, 3),
+    "tuned_wall_s_warm": round(wall_warm, 3),
     "warm_cache": warm_line.lstrip("# "),
     "benchmarks": {
-        r.name: {
-            "us_per_call": round(r.us_per_call, 2),
-            "us_per_call_windowed": (
-                round(r.us_per_call_windowed, 2)
-                if r.us_per_call_windowed is not None else None
+        name: {
+            "xla_us": round(xla[name].us_per_call, 2),
+            "pallas_us": round(pallas[name].us_per_call, 2),
+            "pallas_tuned_us": round(tuned_warm[name].us_per_call, 2),
+            "tuned_speedup_vs_xla": round(
+                xla[name].us_per_call / tuned_warm[name].us_per_call, 3
             ),
-            "timer_dispatch_us": (
-                round(r.timer_dispatch_us, 2)
-                if r.timer_dispatch_us is not None else None
-            ),
+            "tuned_params": tuned_warm[name].tuned_params,
         }
-        for r in records if r.status == "ok"
+        for name in sorted(xla)
     },
 }
 os.makedirs(os.path.dirname(bench_path) or ".", exist_ok=True)
@@ -262,8 +344,8 @@ with open(tmp, "w") as f:
     json.dump(bench, f, indent=1, sort_keys=True)
     f.write("\n")
 os.replace(tmp, bench_path)
-print(f"BENCH_5: cold={wall_cold:.1f}s warm={wall_warm:.1f}s "
-      f"({wall_cold / wall_warm:.1f}x) -> {bench_path}")
+print(f"BENCH_6: {len(NAMES)} workloads x 3 impl columns, tuned "
+      f"cold={wall_cold:.1f}s warm={wall_warm:.1f}s -> {bench_path}")
 PY
   exit 0
 fi
