@@ -249,6 +249,17 @@ def main() -> int:
         print(f"# {engine.disk_cache.summary()}", file=sys.stderr)
 
     print()
+    if "threaded" in args.clients:
+        # Co-location dispatch is single-threaded by construction (tenants
+        # alternate submissions — ServeSpec rejects colocate+threaded), so
+        # the requested threaded client does NOT apply below. Say so
+        # instead of silently dropping the request.
+        print(
+            "# note: co-location forces the single-threaded client "
+            "(tenants alternate submissions); ignoring --clients threaded "
+            "for the interference table",
+            file=sys.stderr,
+        )
     print(f"{'pair (tenant row)':<44}{'p50_us':>10}{'qps':>10}{'slowdown':>10}")
     for name, us, derived in colocation_rows(
         preset=args.preset, names=tuple(args.names), duration_s=args.duration,

@@ -7,6 +7,7 @@ Prints ``name,us_per_call,derived`` CSV. Sections:
   fig5     — application-tier utilization (Fig. 5)
   fig_scaling — device-scaling sweep (sharded data-parallel placement)
   fig_concurrency — dispatch-lane speedup + co-location interference
+  fig_batching — continuous batching: loop vs lanes vs dynamic goodput
   fig_impl — XLA vs Pallas implementation axis (autotuned block sizes)
   table2   — per-layer kernel classification (Table II)
   feat_*   — §V-B modern-feature studies (HyperQ / UM / CG / DP analogues)
@@ -37,6 +38,7 @@ SECTION_NAMES = (
     "fig5",
     "fig_scaling",
     "fig_concurrency",
+    "fig_batching",
     "fig_impl",
     "table2",
     "feat_hyperq",
@@ -71,6 +73,7 @@ def main(argv=None) -> int:
         fig4_dnn_backward,
         fig5_suite_utilization,
         fig12_legacy_utilization,
+        fig_batching,
         fig_concurrency,
         fig_impl,
         fig_scaling,
@@ -87,6 +90,7 @@ def main(argv=None) -> int:
         "fig5": lambda: fig5_suite_utilization.rows(preset=args.preset),
         "fig_scaling": lambda: fig_scaling.rows(preset=args.preset),
         "fig_concurrency": lambda: fig_concurrency.rows(preset=args.preset),
+        "fig_batching": lambda: fig_batching.rows(preset=args.preset),
         "fig_impl": lambda: fig_impl.rows(preset=args.preset),
         "table2": lambda: table2_dnn_kernels.rows(preset=max(args.preset, 1)),
         "feat_hyperq": feat_hyperq.rows,

@@ -51,9 +51,19 @@ declarative half). For every selected benchmark the engine runs the stages:
   record.
   With ``colocate``, the workload is additionally served against a
   partner benchmark on split lanes and both rows carry their p50
-  slowdown vs the isolated baseline. Serving never compiles anything the
-  measure stage didn't already put in the cache (the partner's own entry
-  aside), and a sharded plan serves the sharded lowering.
+  slowdown vs the isolated baseline. With a ``ServeSpec.mix`` of
+  weighted :class:`~repro.core.plan.ShapeBucket`\\ s, arrivals are
+  stamped with seeded bucket labels (or replayed from a saved JSONL
+  trace) and the stage precompiles one vmapped executable per
+  (bucket, batch-width) through the ordinary compile cache *and* the
+  disk cache — warm runs restore every bucket with zero XLA compiles —
+  then routes per bucket (``loop``/``lanes``/``batched``) or coalesces
+  compatible requests under a latency budget (``dynamic``,
+  ``serve/batcher.py``), recording occupancy / padding waste /
+  per-bucket percentiles. Outside a mix, serving never compiles
+  anything the measure stage didn't already put in the cache (the
+  partner's own entry aside), and a sharded plan serves the sharded
+  lowering.
 - **report**: a :class:`BenchmarkRecord` carrying ``devices`` /
   ``placement`` / ``scaling_efficiency`` (plus the serve columns above),
   streamed to the JSONL writer as it is produced.
@@ -102,7 +112,9 @@ from repro.core.results import (
 __all__ = ["CompileCache", "Engine", "RunResult", "SweepStat"]
 
 # (name, preset, frozen-overrides, backward, backend, devices, placement,
-#  impl, frozen-tuned-params)
+#  impl, frozen-tuned-params). Mixed-shape serving appends ("vmap", width)
+# for batch widths > 1 — a bucket's width-1 program at the plan's own
+# preset/overrides shares the measure stage's key (and its executable).
 CacheKey = tuple[str, int, tuple, bool, str, int, str, str, tuple]
 
 
@@ -337,32 +349,55 @@ class Engine:
             # executable deserializes, the XLA compile too; a cold or
             # failed one falls through. Multi-device skips are *recorded*
             # in the cache diagnostics, not silently dropped.
-            use_disk = self.disk_cache is not None and placement.devices == 1
             if self.disk_cache is not None and placement.devices > 1:
                 self.disk_cache.note_skip(
                     key,
                     f"multi-device placement ({placement.devices}x"
                     f"{placement.mode}): lowering embeds device assignment",
                 )
-            if use_disk:
-                loaded = self.disk_cache.load(key, args)
-                if loaded is not None:
-                    executable, info = loaded
-                    return _CacheEntry(executable=executable, info=info)
-            # The impl choice is a trace-time decision: force_impl is
-            # consulted by the kernel ops as fn traces, so the selected
-            # implementation (and its tuned blocks) is baked into this
-            # lowering — execution later needs no context.
-            with self._impl_context(workload, impl, tuned_params):
-                lowered = jax.jit(fn).lower(*args)
-            compiled = lowered.compile()
-            if use_disk:
-                self.disk_cache.store(
-                    key, lowered, compiled, _pass_name(workload, backward)
-                )
-            return _CacheEntry(executable=compiled)
+            return self._compile_through_caches(
+                key, workload, fn, args,
+                pass_name=_pass_name(workload, backward),
+                impl=impl,
+                tuned_params=tuned_params,
+                use_disk=self.disk_cache is not None and placement.devices == 1,
+            )
 
         return self.cache.lookup(key, build)
+
+    def _compile_through_caches(
+        self,
+        key: CacheKey,
+        workload: Workload,
+        fn: Callable[..., Any],
+        args: tuple,
+        *,
+        pass_name: str,
+        impl: str,
+        tuned_params: dict | None,
+        use_disk: bool,
+    ) -> _CacheEntry:
+        """Lower + compile one program through the disk cache: a warm
+        entry skips the retrace — and, when the serialized executable
+        deserializes, the XLA compile too. Shared by the measure-path
+        compile stage and the mixed-shape serve stage's per-(bucket,
+        width) executables, so every bucket persists and restores exactly
+        like a measure executable."""
+        if use_disk:
+            loaded = self.disk_cache.load(key, args)
+            if loaded is not None:
+                executable, info = loaded
+                return _CacheEntry(executable=executable, info=info)
+        # The impl choice is a trace-time decision: force_impl is
+        # consulted by the kernel ops as fn traces, so the selected
+        # implementation (and its tuned blocks) is baked into this
+        # lowering — execution later needs no context.
+        with self._impl_context(workload, impl, tuned_params):
+            lowered = jax.jit(fn).lower(*args)
+        compiled = lowered.compile()
+        if use_disk:
+            self.disk_cache.store(key, lowered, compiled, pass_name)
+        return _CacheEntry(executable=compiled)
 
     def _stage_tune(
         self,
@@ -566,13 +601,223 @@ class Engine:
             completions, slo_us=serve.slo_us, n_lanes=serve.lanes
         )
 
+    def _bucket_key(
+        self,
+        spec: BenchmarkSpec,
+        bucket_preset: int,
+        merged_overrides: dict,
+        placement: Placement,
+        impl: str,
+        tuned_params: dict | None,
+        width: int,
+    ) -> tuple:
+        """Compile-cache key for one (shape bucket, batch width) serve
+        executable. Width 1 uses the ordinary key shape, so a bucket at
+        the plan's own preset/overrides *shares the measure stage's
+        executable*; wider programs append ("vmap", width)."""
+        base = (
+            spec.name,
+            bucket_preset,
+            tuple(sorted(merged_overrides.items())),
+            False,
+            jax.default_backend(),
+            placement.devices,
+            placement.mode,
+            impl,
+            tuple(sorted((tuned_params or {}).items())),
+        )
+        return base if width == 1 else base + ("vmap", width)
+
+    def _build_bucket_calls(
+        self,
+        spec: BenchmarkSpec,
+        plan: ExecutionPlan,
+        preset: int,
+        placement: Placement,
+        impl: str,
+        tuned_params: dict | None,
+    ) -> dict[str, dict[int, Callable[[], Any]]]:
+        """Precompile one executable per (shape bucket, batch width).
+
+        Every program goes through the in-process CompileCache AND the
+        two-tier disk cache under a bucket-specific key, so a warm run
+        restores the whole table with zero XLA compiles. Batch member j
+        gets inputs from ``make_inputs(seed + j)`` — a width-w program
+        computes w *distinct* requests, stacked on a new leading axis and
+        committed to the device once. Each executable is run once here
+        (pipeline warmup), so first-execution overhead never lands in a
+        served request's latency.
+        """
+        import numpy as np
+
+        from repro.serve.batcher import bucket_widths
+
+        serve = plan.serve
+        widths = bucket_widths(serve.dispatch, serve.max_batch)
+        calls: dict[str, dict[int, Callable[[], Any]]] = {}
+        for bucket in serve.buckets(preset):
+            bp = (
+                bucket.preset
+                if bucket.preset in spec.presets
+                else min(spec.presets)
+            )
+            merged = {
+                **plan.overrides_for(spec.name),
+                **dict(bucket.overrides),
+            }
+            workload = spec.build_preset(bp, **merged)
+            if workload.meta.get("no_jit"):
+                raise ValueError(
+                    f"mixed-shape serving needs a jittable workload; "
+                    f"{workload.name!r} is no_jit (host-transfer)"
+                )
+            instances = [
+                workload.make_inputs(plan.seed + j) for j in range(max(widths))
+            ]
+            per_width: dict[int, Callable[[], Any]] = {}
+            for width in widths:
+                if width == 1:
+                    fn, wargs = workload.fn, instances[0]
+                else:
+                    fn = jax.vmap(workload.fn)
+                    wargs = jax.tree_util.tree_map(
+                        lambda *xs: np.stack(xs), *instances[:width]
+                    )
+                wargs = commit_args(wargs)
+                key = self._bucket_key(
+                    spec, bp, merged, placement, impl, tuned_params, width
+                )
+                entry = self.cache.lookup(
+                    key,
+                    lambda key=key, wl=workload, fn=fn, a=wargs, w=width: (
+                        self._compile_through_caches(
+                            key, wl, fn, a,
+                            pass_name=f"{wl.name}.serve[{w}]",
+                            impl=impl,
+                            tuned_params=tuned_params,
+                            use_disk=self.disk_cache is not None,
+                        )
+                    ),
+                )
+                call = lambda e=entry, a=wargs: e.executable(*a)  # noqa: E731
+                jax.block_until_ready(call())  # warm: allocs, first dispatch
+                per_width[width] = call
+            calls[bucket.label] = per_width
+        return calls
+
+    def _mixed_schedule(self, serve: ServeSpec, seed: int, bucket_labels):
+        """The mixed-shape request stream: load ``serve.trace`` verbatim
+        when the file exists (the trace IS the load — qps/mix knobs are
+        ignored on replay), else generate seeded Poisson arrivals, sample
+        each request's bucket from the mix, and save to ``serve.trace``
+        if one was named — so the next run (any dispatch policy) replays
+        this exact stream."""
+        from repro.serve.loadgen import (
+            load_trace,
+            open_loop_schedule,
+            sample_mix,
+            save_trace,
+        )
+
+        warmup = max(serve.concurrency, serve.max_batch, serve.lanes, 2)
+        if serve.trace is not None and os.path.exists(serve.trace):
+            schedule = load_trace(serve.trace)
+            unknown = {r.bucket for r in schedule} - set(bucket_labels)
+            if unknown:
+                raise ValueError(
+                    f"trace {serve.trace!r} names buckets {sorted(map(str, unknown))} "
+                    f"absent from this run's mix {sorted(bucket_labels)}"
+                )
+            return schedule
+        schedule = open_loop_schedule(
+            qps=serve.qps,
+            duration_s=serve.duration_s,
+            seed=seed,
+            warmup=warmup,
+        )
+        schedule = sample_mix(
+            schedule,
+            {b.label: b.weight for b in serve.buckets(0)}
+            if serve.mix is not None
+            else {label: 1.0 for label in bucket_labels},
+            seed=seed,
+        )
+        if serve.trace is not None:
+            save_trace(schedule, serve.trace)
+        return schedule
+
+    def _serve_mixed(
+        self,
+        spec: BenchmarkSpec,
+        plan: ExecutionPlan,
+        preset: int,
+        placement: Placement,
+        impl: str,
+        tuned_params: dict | None,
+    ):
+        """The continuous-batching serve path: per-bucket executables
+        (every (bucket, width) through both compile caches), a mixed-shape
+        schedule (generated or replayed from a trace), and the spec's
+        dispatch policy from ``repro.serve.batcher``. Stats carry batch
+        occupancy, padding waste, and per-bucket latency percentiles."""
+        from repro.serve.batcher import (
+            serve_dynamic,
+            serve_fixed_batched,
+            serve_mixed_lanes,
+            serve_mixed_loop,
+        )
+        from repro.serve.latency import stats_from_completions
+
+        serve = plan.serve
+        calls = self._build_bucket_calls(
+            spec, plan, preset, placement, impl, tuned_params
+        )
+        schedule = self._mixed_schedule(serve, plan.seed, set(calls))
+        if serve.dispatch == "loop":
+            report = serve_mixed_loop(calls, schedule)
+        elif serve.dispatch == "lanes":
+            report = serve_mixed_lanes(
+                calls, schedule,
+                n_lanes=serve.lanes, concurrency=serve.concurrency,
+            )
+        elif serve.dispatch == "batched":
+            report = serve_fixed_batched(
+                calls, schedule,
+                batch=serve.max_batch, concurrency=serve.concurrency,
+            )
+        else:
+            report = serve_dynamic(
+                calls, schedule,
+                budget_s=serve.batch_budget_us / 1e6,
+                concurrency=serve.concurrency,
+            )
+        return stats_from_completions(
+            report.completions,
+            # A replayed trace's offered load is the trace's, not the
+            # spec's qps knob (which replay ignores).
+            offered_qps=(
+                schedule.offered_qps
+                if schedule.offered_qps is not None
+                else serve.qps
+            ),
+            slo_us=serve.slo_us,
+            truncated=schedule.truncated,
+            n_lanes=serve.lanes if serve.dispatch == "lanes" else 1,
+            batch_occupancy=report.occupancy,
+            padding_waste=report.padding_waste,
+            n_batches=len(report.batches),
+        )
+
     def _stage_serve(
         self,
         spec: BenchmarkSpec,
         entry: _CacheEntry,
         args: tuple,
         plan: ExecutionPlan,
+        preset: int,
         placement: Placement,
+        impl: str = "xla",
+        tuned_params: dict | None = None,
     ) -> tuple[Any, str | None, float | None, list[BenchmarkRecord]]:
         """Serve the measured executable under the plan's ServeSpec.
 
@@ -581,9 +826,16 @@ class Engine:
         — zero new compilations. With ``colocate``, the partner benchmark
         is built/placed/compiled through the same cache and both tenants
         are served isolated then together (``serve.interference``); the
-        partner's colocated row is returned for the report.
+        partner's colocated row is returned for the report. A mixed-shape
+        spec (``serve.is_mixed``) routes through ``_serve_mixed`` instead:
+        per-bucket vmapped executables and the batcher dispatch policies.
         """
         serve = plan.serve
+        if serve.is_mixed:
+            stats = self._serve_mixed(
+                spec, plan, preset, placement, impl, tuned_params
+            )
+            return stats, None, None, []
         call = lambda: entry.executable(*args)  # noqa: E731
         if serve.colocate is None:
             return self._serve_call(call, serve, plan.seed), None, None, []
@@ -707,6 +959,11 @@ class Engine:
                 get_benchmark(plan.serve.colocate)
             except KeyError as e:
                 raise PlanError(str(e)) from None
+        if plan.serve is not None and plan.serve.is_mixed and want > 1:
+            raise PlanError(
+                "mixed-shape serving (mix/trace/batcher dispatch) is "
+                f"single-device; the plan sweeps up to {want} devices"
+            )
         metadata = RunMetadata.capture(
             preset=plan.preset,
             devices=plan.devices,
@@ -849,7 +1106,8 @@ class Engine:
             if plan.serve is not None and not backward:
                 stage = "serve"
                 stats, colocate, slowdown, extra = self._stage_serve(
-                    spec, entry, args, plan, placement
+                    spec, entry, args, plan, preset, placement,
+                    impl, tuned_params,
                 )
                 rec.apply_serve(
                     stats,
@@ -858,6 +1116,8 @@ class Engine:
                     client=plan.serve.client,
                     colocate=colocate,
                     slowdown=slowdown,
+                    dispatch=plan.serve.dispatch,
+                    mix=_mix_label(plan.serve),
                 )
             return [rec] + extra
         except Exception as e:  # noqa: BLE001 — fault isolation is the contract
@@ -891,6 +1151,16 @@ def _enable_jax_persistent_cache(cache_dir: str) -> None:
 
 def _pass_name(workload: Workload, backward: bool) -> str:
     return workload.name + (".bwd" if backward else "")
+
+
+def _mix_label(serve: ServeSpec) -> str | None:
+    """The record's compact mix description: ``label@weight`` per bucket
+    (None for non-mixed serve specs)."""
+    if not serve.is_mixed:
+        return None
+    if serve.mix is None:
+        return None
+    return ",".join(f"{b.label}@{b.weight:g}" for b in serve.mix)
 
 
 def _err_text(e: BaseException, limit: int = 500) -> str:

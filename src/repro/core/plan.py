@@ -33,10 +33,12 @@ __all__ = [
     "ExecutionPlan",
     "Placement",
     "ServeSpec",
+    "ShapeBucket",
     "PlanError",
     "PLACEMENT_MODES",
     "SERVE_MODES",
     "SERVE_CLIENTS",
+    "SERVE_DISPATCH",
     "IMPLS",
 ]
 
@@ -44,6 +46,13 @@ PLACEMENT_MODES = ("replicate", "shard")
 IMPLS = ("xla", "pallas")
 SERVE_MODES = ("open", "closed")
 SERVE_CLIENTS = ("single", "threaded")
+# How requests map onto device programs. "lanes" is the pre-mix default
+# (N dispatch lanes over the measure-stage executable); the other three
+# are the mixed-shape paths realized by serve/batcher.py: "loop" is the
+# sync-per-request floor, "batched" a fixed-width vmap that waits to fill,
+# "dynamic" the continuous batcher that coalesces compatible requests into
+# the largest width that fits under the latency budget.
+SERVE_DISPATCH = ("lanes", "loop", "batched", "dynamic")
 
 
 class PlanError(ValueError):
@@ -81,6 +90,53 @@ class Placement:
 
 
 @dataclasses.dataclass(frozen=True)
+class ShapeBucket:
+    """One request shape in a serve mix: a preset (plus optional per-param
+    overrides on top of it) drawn with probability proportional to
+    ``weight``. Buckets are identified everywhere — requests, traces,
+    compile-cache keys, per-bucket record columns — by :attr:`label`
+    (``p<preset>`` plus ``/param=value`` for each override)."""
+
+    preset: int = 0
+    weight: float = 1.0
+    overrides: tuple[tuple[str, Any], ...] = ()
+
+    def __post_init__(self) -> None:
+        if self.preset < 0:
+            raise PlanError(f"mix bucket preset must be >= 0, got {self.preset}")
+        if not self.weight > 0:
+            raise PlanError(f"mix bucket weight must be > 0, got {self.weight}")
+        if not isinstance(self.overrides, tuple):
+            object.__setattr__(
+                self,
+                "overrides",
+                tuple(tuple(kv) for kv in self.overrides),
+            )
+        else:
+            object.__setattr__(
+                self,
+                "overrides",
+                tuple(
+                    kv if isinstance(kv, tuple) else tuple(kv)
+                    for kv in self.overrides
+                ),
+            )
+        for kv in self.overrides:
+            if len(kv) != 2 or not isinstance(kv[0], str):
+                raise PlanError(
+                    f"mix bucket overrides must be (param, value) pairs, "
+                    f"got {self.overrides!r}"
+                )
+            _freeze_value("mix", kv[0], kv[1])
+
+    @property
+    def label(self) -> str:
+        parts = [f"p{self.preset}"]
+        parts += [f"{k}={v}" for k, v in sorted(self.overrides)]
+        return "/".join(parts)
+
+
+@dataclasses.dataclass(frozen=True)
 class ServeSpec:
     """How to serve the selected workloads under load (``repro.serve``).
 
@@ -105,10 +161,35 @@ class ServeSpec:
       interference), so it requires ``mode="closed"``; its dispatch is
       single-threaded by construction (tenants alternate submissions), so
       it requires ``client="single"``.
+    - ``mix``: a tuple of :class:`ShapeBucket` — each open-loop request
+      draws its shape from this weighted distribution (seeded off the
+      plan seed, independently of the arrival draws). The engine then
+      precompiles one executable per (bucket, batch width) through both
+      compile caches and serves via ``repro.serve.batcher``.
+    - ``dispatch``: how requests map onto device programs (one of
+      ``SERVE_DISPATCH``). ``lanes`` is the classic N-lane path; ``loop``
+      / ``batched`` / ``dynamic`` are the mixed-shape paths — sync
+      per-request floor, fixed-width vmap that waits to fill, and the
+      continuous batcher that coalesces queued requests of one bucket
+      into the largest width that fits under ``batch_budget_us``.
+      Padding to a width edge is *measured* (``padding_waste``), never
+      hidden.
+    - ``trace``: path to a replayable JSONL arrival+shape trace. If the
+      file exists it is loaded verbatim (qps/duration/mix draws are
+      ignored — the trace IS the load); otherwise the generated schedule
+      is saved there, so two runs with different dispatch modes replay
+      the identical request stream.
+    - ``batch_budget_us`` / ``max_batch``: dynamic-batcher knobs — how
+      long the oldest queued request may wait before a partial batch
+      dispatches anyway, and the largest vmap width (widths are powers
+      of two up to it).
 
-    The engine runs serving as a stage after ``measure``, calling the
-    *same cached executable* the timer used — a serve run never recompiles
-    (and a sharded plan serves the sharded lowering).
+    The engine runs serving as a stage after ``measure``. Dispatch
+    ``lanes`` without a mix calls the *same cached executable* the timer
+    used — never a recompile (and a sharded plan serves the sharded
+    lowering); the mixed-shape paths serve per-bucket executables that
+    went through the ordinary CompileCache and the HLO disk cache, so a
+    warm run restores every bucket with zero XLA compiles.
     """
 
     mode: str = "closed"
@@ -119,8 +200,32 @@ class ServeSpec:
     colocate: str | None = None
     client: str = "single"
     slo_us: float | None = None
+    dispatch: str = "lanes"
+    mix: tuple[ShapeBucket, ...] | None = None
+    trace: str | None = None
+    batch_budget_us: float = 2000.0
+    max_batch: int = 8
 
     def __post_init__(self) -> None:
+        if self.mix is not None:
+            entries = []
+            for entry in self.mix:
+                if isinstance(entry, Mapping):  # RunMetadata JSON round-trip
+                    known = {f.name for f in dataclasses.fields(ShapeBucket)}
+                    entry = ShapeBucket(
+                        **{k: v for k, v in entry.items() if k in known}
+                    )
+                elif not isinstance(entry, ShapeBucket):
+                    raise PlanError(
+                        f"serve mix entries must be ShapeBucket, got {entry!r}"
+                    )
+                entries.append(entry)
+            if not entries:
+                raise PlanError("serve mix must have at least one bucket")
+            labels = [e.label for e in entries]
+            if len(set(labels)) != len(labels):
+                raise PlanError(f"serve mix has duplicate buckets: {labels}")
+            object.__setattr__(self, "mix", tuple(entries))
         if self.mode not in SERVE_MODES:
             raise PlanError(
                 f"serve mode must be one of {SERVE_MODES}, got {self.mode!r}"
@@ -150,6 +255,54 @@ class ServeSpec:
                 f"submissions); got colocate={self.colocate!r} with "
                 f"client={self.client!r}"
             )
+        if self.dispatch not in SERVE_DISPATCH:
+            raise PlanError(
+                f"serve dispatch must be one of {SERVE_DISPATCH}, "
+                f"got {self.dispatch!r}"
+            )
+        if self.batch_budget_us <= 0:
+            raise PlanError(
+                f"batch_budget_us must be > 0, got {self.batch_budget_us}"
+            )
+        if self.max_batch < 1:
+            raise PlanError(f"max_batch must be >= 1, got {self.max_batch}")
+        mixed = (
+            self.mix is not None
+            or self.trace is not None
+            or self.dispatch != "lanes"
+        )
+        if mixed and self.mode != "open":
+            raise PlanError(
+                "mixed-shape serving (mix/trace/dispatch != 'lanes') is "
+                f"arrival-driven; it requires mode='open', got {self.mode!r}"
+            )
+        if mixed and self.client != "single":
+            raise PlanError(
+                "mixed-shape serving dispatches from one host thread; "
+                f"it requires client='single', got {self.client!r}"
+            )
+        if mixed and self.colocate is not None:
+            raise PlanError(
+                "mixed-shape serving cannot be combined with colocate "
+                f"(got colocate={self.colocate!r})"
+            )
+
+    @property
+    def is_mixed(self) -> bool:
+        """True when serving goes through the mixed-shape/batcher path
+        (per-bucket executables) rather than the classic lanes path."""
+        return (
+            self.mix is not None
+            or self.trace is not None
+            or self.dispatch != "lanes"
+        )
+
+    def buckets(self, default_preset: int) -> tuple[ShapeBucket, ...]:
+        """The effective bucket set: the mix, or one bucket at the plan's
+        preset when only trace/dispatch selected the mixed path."""
+        if self.mix is not None:
+            return self.mix
+        return (ShapeBucket(preset=default_preset),)
 
 
 def _freeze_value(name: str, param: str, value: Any) -> Any:

@@ -57,7 +57,15 @@ __all__ = [
 #     tuned_params / tune_trials / tune_trials_us (the autotune stage's
 #     winning block config and what the sweep cost); RunMetadata carries
 #     the plan's impl and tune flags.
-SCHEMA_VERSION = 6
+# v7: continuous batching — serve_dispatch (lanes|loop|batched|dynamic, how
+#     requests mapped onto device programs), serve_mix (the weighted
+#     shape-bucket mix served, "label@weight,..."), batch_occupancy
+#     (filled / dispatched batch slots), padding_waste (padded / dispatched
+#     slots — padding to a bucket edge is measured, never hidden),
+#     serve_batches (device programs dispatched), bucket_latency_us
+#     (per-bucket requests + p50/p95/p99 keyed by bucket label); the
+#     ServeSpec in RunMetadata carries dispatch/mix/trace/batch knobs.
+SCHEMA_VERSION = 7
 
 
 class ReportError(ValueError):
@@ -107,6 +115,16 @@ class BenchmarkRecord:
     / ``tune_trials`` / ``tune_trials_us`` report the autotune stage:
     the winning block config, how many candidates were timed (0 = winner
     restored from the disk cache), and the sweep's wall-clock cost.
+
+    Schema v7 adds the continuous-batching columns: ``serve_dispatch``
+    (how requests mapped onto device programs — classic ``lanes``, or the
+    mixed-shape ``loop`` / ``batched`` / ``dynamic`` batcher paths),
+    ``serve_mix`` (the weighted shape mix served), ``batch_occupancy``
+    (filled / dispatched batch slots), ``padding_waste`` (padded slots —
+    a dynamic batcher that pads a 3-request batch to width 4 *reports*
+    that quarter, never hides it), ``serve_batches`` (device programs
+    dispatched), and ``bucket_latency_us`` (per-bucket request counts and
+    p50/p95/p99 latency percentiles keyed by bucket label).
     """
 
     name: str
@@ -159,6 +177,18 @@ class BenchmarkRecord:
     serve_slo_us: float | None = None  # the SLO goodput was measured against
     dispatch_overhead_us: float | None = None
     lane_qps: list[float] | None = None  # list, not tuple: JSON round-trip
+    # Continuous-batching columns (schema v7) — None unless the row was
+    # served. batch_occupancy / padding_waste / serve_batches are further
+    # None outside the mixed-shape dispatch paths (classic lanes serving
+    # dispatches no batches).
+    serve_dispatch: str | None = None
+    serve_mix: str | None = None  # "label@weight,..." (None = no mix)
+    batch_occupancy: float | None = None  # filled / dispatched slots
+    padding_waste: float | None = None  # padded / dispatched slots
+    serve_batches: int | None = None  # device programs dispatched
+    # bucket label -> {"requests", "p50_us", "p95_us", "p99_us"}; a plain
+    # dict (not a dataclass) so JSON round-trips it unchanged.
+    bucket_latency_us: dict | None = None
 
     def apply_serve(
         self,
@@ -169,6 +199,8 @@ class BenchmarkRecord:
         client: str = "single",
         colocate: str | None = None,
         slowdown: float | None = None,
+        dispatch: str | None = None,
+        mix: str | None = None,
     ) -> "BenchmarkRecord":
         """Fold a ``serve.latency.LatencyStats`` into this record."""
         self.serve_mode = mode
@@ -189,6 +221,27 @@ class BenchmarkRecord:
         self.dispatch_overhead_us = stats.dispatch_overhead_us
         self.lane_qps = (
             list(stats.lane_qps) if stats.lane_qps is not None else None
+        )
+        # Continuous-batching accounting (schema v7). getattr-tolerant so
+        # plain stats objects without the batching fields still fold in.
+        self.serve_dispatch = dispatch
+        self.serve_mix = mix
+        self.batch_occupancy = getattr(stats, "batch_occupancy", None)
+        self.padding_waste = getattr(stats, "padding_waste", None)
+        self.serve_batches = getattr(stats, "n_batches", None)
+        bucket_stats = getattr(stats, "bucket_stats", None)
+        self.bucket_latency_us = (
+            {
+                label: {
+                    "requests": b.requests,
+                    "p50_us": b.p50_us,
+                    "p95_us": b.p95_us,
+                    "p99_us": b.p99_us,
+                }
+                for label, b in bucket_stats
+            }
+            if bucket_stats
+            else None
         )
         return self
 
@@ -367,6 +420,19 @@ class BenchmarkRecord:
                 )
             if self.dispatch_overhead_us is not None:
                 serve += f";dispatch_us={self.dispatch_overhead_us:.1f}"
+            if self.serve_dispatch is not None and self.serve_dispatch != "lanes":
+                serve += f";dispatch={self.serve_dispatch}"
+            if self.batch_occupancy is not None:
+                serve += (
+                    f";occupancy={self.batch_occupancy:.3f};"
+                    f"padding_waste={self.padding_waste:.3f}"
+                )
+            if self.bucket_latency_us:
+                buckets = "/".join(
+                    f"{label}:p50={b['p50_us']:.0f}"
+                    for label, b in sorted(self.bucket_latency_us.items())
+                )
+                serve += f";buckets={buckets}"
             if self.slowdown_vs_isolated is not None:
                 serve += (
                     f";colocate={self.serve_colocate};"

@@ -45,6 +45,16 @@ reason recorded in the row); ``--tune`` sweeps each kernel's block/grid
 tune space before compiling and times the winner (the winning config
 persists in ``--cache-dir``, so a warm tuned run performs zero trials
 and zero compiles).
+
+Batching flags (mixed-shape serving): ``--serve-mix`` gives each open-loop
+request a shape drawn from a weighted preset/override distribution;
+``--serve-dispatch {lanes,loop,batched,dynamic}`` picks how requests map
+onto device programs (``dynamic`` is the continuous batcher, coalescing
+compatible requests into the largest vmapped bucket that fits under
+``--batch-latency-budget`` microseconds, padding — measured as
+``padding_waste`` — up to ``--max-batch``); ``--serve-trace PATH`` saves
+the generated arrival+shape stream as replayable JSONL, or replays it
+verbatim when the file already exists.
 """
 
 from __future__ import annotations
@@ -58,11 +68,13 @@ from repro.core.plan import (
     IMPLS,
     PLACEMENT_MODES,
     SERVE_CLIENTS,
+    SERVE_DISPATCH,
     SERVE_MODES,
     ExecutionPlan,
     Placement,
     PlanError,
     ServeSpec,
+    ShapeBucket,
 )
 from repro.core.results import BenchmarkRecord, to_csv_lines
 
@@ -85,6 +97,16 @@ examples:
   # carry slowdown-vs-isolated
   python -m repro.core.suite --names gemm_f32_nn --serve closed \\
       --concurrency 8 --lanes 4 --colocate kmeans
+  # mixed-shape continuous batching: 2/3 of requests at preset 0, 1/3 at
+  # preset 0 with cols=256, coalesced by the dynamic batcher into vmapped
+  # buckets of up to 8 under a 2 ms wait budget
+  python -m repro.core.suite --names pathfinder --serve open --qps 500 \\
+      --serve-mix "0@2,0/cols=256@1" --serve-dispatch dynamic \\
+      --batch-latency-budget 2000 --max-batch 8
+  # trace-driven replay: the first run saves the arrival+shape stream,
+  # later runs (any --serve-dispatch) replay the identical trace
+  python -m repro.core.suite --names pathfinder --serve open --qps 500 \\
+      --serve-mix "0@2,1@1" --serve-trace /tmp/mix.jsonl --serve-dispatch loop
 
 serving semantics:
   open-loop rows report offered_qps (the target arrival rate); a schedule
@@ -95,6 +117,22 @@ serving semantics:
   The threaded client splits the arrival process into per-lane Poisson
   sub-schedules from seeded child RNGs: the merged stream still offers
   the target QPS and is deterministic for a fixed --seed.
+
+batching semantics:
+  --serve-mix is a comma-separated list of PRESET[/PARAM=VALUE...][@WEIGHT]
+  buckets (weights default 1 and are normalized); each request's bucket is
+  drawn from its own seeded stream, so the arrival process is identical
+  with and without a mix. The engine precompiles one vmapped executable
+  per (bucket, batch width) through the compile cache AND --cache-dir, so
+  a warm run restores every bucket with zero XLA compiles. The dynamic
+  batcher dispatches a bucket's queue when it can fill --max-batch, or
+  when its oldest request has waited --batch-latency-budget microseconds —
+  a partial batch is padded up to the smallest compiled width that holds
+  it. Padding is measured, not hidden: rows carry batch_occupancy
+  (filled/dispatched slots) and padding_waste (padded/dispatched slots,
+  = 1 - occupancy), plus per-bucket p50/p95/p99 in bucket_latency_us.
+  Latency is stamped from the scheduled arrival, so time spent waiting in
+  a coalescing queue counts toward latency and goodput.
 """
 
 
@@ -184,6 +222,62 @@ def _parse_scale_devices(text: str | None) -> tuple[int, ...] | None:
     return counts
 
 
+def _parse_mix(text: str) -> tuple[ShapeBucket, ...]:
+    """``"0@2,0/cols=256@1"`` -> weighted ShapeBuckets.
+
+    Grammar per comma-separated bucket: ``PRESET[/PARAM=VALUE...][@WEIGHT]``
+    (weight defaults to 1.0; values parse as int, then float, then str —
+    the --override convention).
+    """
+
+    def parse_value(value: str) -> Any:
+        try:
+            return int(value)
+        except ValueError:
+            try:
+                return float(value)
+            except ValueError:
+                return value
+
+    buckets = []
+    for part in text.split(","):
+        part = part.strip()
+        if not part:
+            continue
+        weight = 1.0
+        if "@" in part:
+            part, w = part.rsplit("@", 1)
+            try:
+                weight = float(w)
+            except ValueError:
+                raise SystemExit(
+                    f"bad --serve-mix weight {w!r} in {text!r}; expected a number"
+                )
+        fields = part.split("/")
+        try:
+            preset = int(fields[0])
+        except ValueError:
+            raise SystemExit(
+                f"bad --serve-mix bucket {part!r} in {text!r}; expected "
+                "PRESET[/PARAM=VALUE...][@WEIGHT], e.g. 0@2,1/cols=256@1"
+            )
+        overrides = []
+        for field in fields[1:]:
+            if "=" not in field:
+                raise SystemExit(
+                    f"bad --serve-mix override {field!r} in {text!r}; "
+                    "expected PARAM=VALUE"
+                )
+            k, v = field.split("=", 1)
+            overrides.append((k, parse_value(v)))
+        buckets.append(
+            ShapeBucket(preset=preset, weight=weight, overrides=tuple(overrides))
+        )
+    if not buckets:
+        raise SystemExit(f"bad --serve-mix {text!r}; no buckets given")
+    return tuple(buckets)
+
+
 def _parse_serve(args) -> ServeSpec | None:
     """A ServeSpec when any serving flag was used (--colocate alone
     implies a closed-loop serve), else None. Serve-tuning flags without a
@@ -195,6 +289,11 @@ def _parse_serve(args) -> ServeSpec | None:
         "--serve-duration": args.serve_duration,
         "--serve-client": args.serve_client,
         "--slo-us": args.slo_us,
+        "--serve-dispatch": args.serve_dispatch,
+        "--serve-mix": args.serve_mix,
+        "--serve-trace": args.serve_trace,
+        "--batch-latency-budget": args.batch_latency_budget,
+        "--max-batch": args.max_batch,
     }
     if args.serve is None and args.colocate is None:
         stray = [flag for flag, value in tuning.items() if value is not None]
@@ -220,6 +319,19 @@ def _parse_serve(args) -> ServeSpec | None:
         colocate=args.colocate,
         client=args.serve_client if args.serve_client is not None else spec.client,
         slo_us=args.slo_us,
+        dispatch=(
+            args.serve_dispatch
+            if args.serve_dispatch is not None
+            else spec.dispatch
+        ),
+        mix=_parse_mix(args.serve_mix) if args.serve_mix is not None else None,
+        trace=args.serve_trace,
+        batch_budget_us=(
+            args.batch_latency_budget
+            if args.batch_latency_budget is not None
+            else spec.batch_budget_us
+        ),
+        max_batch=args.max_batch if args.max_batch is not None else spec.max_batch,
     )
 
 
@@ -278,6 +390,33 @@ def main(argv: Sequence[str] | None = None) -> int:
                     help="latency SLO in microseconds; rows gain "
                          "goodput_qps (completions with latency <= SLO "
                          "per second; latency == SLO counts as good)")
+    ap.add_argument("--serve-dispatch", choices=SERVE_DISPATCH, default=None,
+                    help="how requests map onto device programs: classic "
+                         "N-lane dispatch (lanes, default), or the mixed-"
+                         "shape paths — sync per-request (loop), fixed-"
+                         "width vmap that waits to fill (batched), or the "
+                         "continuous batcher (dynamic)")
+    ap.add_argument("--serve-mix", type=str, default=None,
+                    metavar="P[/K=V...][@W],...",
+                    help="weighted request-shape mix for open-loop serving, "
+                         "e.g. '0@2,1@1' or '0@3,0/cols=256@1'; per-request "
+                         "buckets are drawn from a seeded stream so the mix "
+                         "is deterministic per --seed (see batching "
+                         "semantics below)")
+    ap.add_argument("--serve-trace", type=str, default=None, metavar="PATH",
+                    help="replayable JSONL arrival+shape trace: replayed "
+                         "verbatim when PATH exists, else the generated "
+                         "schedule is saved there for later runs to replay")
+    ap.add_argument("--batch-latency-budget", type=float, default=None,
+                    metavar="US",
+                    help="dynamic batcher wait budget in microseconds "
+                         "(default 2000): a partial batch dispatches — "
+                         "padded, and the padding measured — once its "
+                         "oldest request has waited this long")
+    ap.add_argument("--max-batch", type=int, default=None, metavar="N",
+                    help="largest batch width (default 8); the dynamic "
+                         "batcher compiles power-of-two widths up to N per "
+                         "bucket, --serve-dispatch batched uses exactly N")
     ap.add_argument("--impl", choices=IMPLS, default="xla",
                     help="implementation to compile and time: the lax/XLA "
                          "lowering (xla, default) or the hand-written "

@@ -28,10 +28,19 @@ workload under generated load:
   SLO, per-lane achieved QPS, and the truncation honesty flag.
 - :mod:`repro.serve.interference` — co-locate workload pairs across split
   lanes and report the slowdown-vs-isolated matrix.
+- :mod:`repro.serve.batcher` — continuous batching over mixed-shape
+  traffic: per-bucket request queues coalesced into shape-bucketed
+  vmapped executables under a latency budget, with batch occupancy and
+  padding waste measured per dispatched batch (plus the uncoalesced
+  ``loop`` / ``lanes`` / fixed-``batched`` policies over the same mixed
+  schedule, for comparison at identical offered load).
 
 The engine (``core/engine.py``) drives all of this as a ``serve`` stage
 after ``measure``, reusing the compile cache's executables — serving never
 recompiles what measuring already compiled, whichever client issues it.
+Mixed-shape serving precompiles one executable per (shape bucket, batch
+width) through the same caches, so warm runs restore every bucket with
+zero XLA compiles.
 """
 
 from repro.serve.client import (
@@ -51,16 +60,28 @@ from repro.serve.lanes import (
     run_open_loop,
     serve_loop,
 )
-from repro.serve.latency import LatencyStats, stats_from_completions
+from repro.serve.latency import BucketStats, LatencyStats, stats_from_completions
 from repro.serve.loadgen import (
     Request,
     Schedule,
     closed_loop_schedule,
+    load_trace,
     merge_schedules,
     open_loop_lane_schedules,
     open_loop_schedule,
+    sample_mix,
+    save_trace,
 )
 from repro.serve.interference import ColocationResult, colocate_closed_loop
+from repro.serve.batcher import (
+    BatchExecution,
+    BatchReport,
+    bucket_widths,
+    serve_dynamic,
+    serve_fixed_batched,
+    serve_mixed_lanes,
+    serve_mixed_loop,
+)
 
 __all__ = [
     "DISPATCH_MODES",
@@ -86,4 +107,15 @@ __all__ = [
     "open_loop_schedule",
     "ColocationResult",
     "colocate_closed_loop",
+    "BucketStats",
+    "sample_mix",
+    "save_trace",
+    "load_trace",
+    "BatchExecution",
+    "BatchReport",
+    "bucket_widths",
+    "serve_mixed_loop",
+    "serve_mixed_lanes",
+    "serve_fixed_batched",
+    "serve_dynamic",
 ]

@@ -66,6 +66,7 @@ class Completion:
     t_submit: float  # perf_counter seconds (scheduled arrival for open loop)
     t_done: float
     warmup: bool
+    bucket: str | None = None  # shape bucket served (None = single-shape)
 
     @property
     def latency_us(self) -> float:
@@ -140,6 +141,7 @@ class DispatchLane:
             t_submit=t_submit,
             t_done=time.perf_counter(),
             warmup=request.warmup,
+            bucket=request.bucket,
         )
 
 
@@ -226,6 +228,7 @@ def serve_loop(
                     t_submit=t0,
                     t_done=time.perf_counter(),
                     warmup=req.warmup,
+                    bucket=req.bucket,
                 )
             )
         return out
@@ -239,7 +242,7 @@ def serve_loop(
         out.extend(
             Completion(
                 index=req.index, lane=0, t_submit=t0, t_done=t_done,
-                warmup=req.warmup,
+                warmup=req.warmup, bucket=req.bucket,
             )
             for req, t0, _ in pending
         )

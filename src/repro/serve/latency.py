@@ -27,7 +27,22 @@ import numpy as np
 
 from repro.serve.lanes import Completion
 
-__all__ = ["LatencyStats", "stats_from_completions", "lane_qps_from_completions"]
+__all__ = [
+    "LatencyStats",
+    "BucketStats",
+    "stats_from_completions",
+    "lane_qps_from_completions",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketStats:
+    """Latency percentiles for one shape bucket's measured completions."""
+
+    requests: int
+    p50_us: float
+    p95_us: float
+    p99_us: float
 
 
 @dataclasses.dataclass(frozen=True)
@@ -47,6 +62,14 @@ class LatencyStats:
     truncated: bool = False  # schedule hit its cap: offered < offered_qps
     dispatch_overhead_us: float | None = None  # mean host time per dispatch
     lane_qps: tuple[float, ...] | None = None  # per-lane achieved QPS
+    # Mixed-shape serving (serve.batcher): per-bucket latency percentiles
+    # keyed by bucket label, batch occupancy (filled / dispatched slots),
+    # and padding waste (padded / dispatched slots). None outside the
+    # bucketed paths.
+    bucket_stats: tuple[tuple[str, "BucketStats"], ...] | None = None
+    batch_occupancy: float | None = None
+    padding_waste: float | None = None
+    n_batches: int | None = None
 
     def derived(self) -> str:
         """The compact ``k=v;...`` form figure drivers put in CSV rows.
@@ -69,6 +92,10 @@ class LatencyStats:
             parts.append(f"goodput_qps={self.goodput_qps:.1f}")
         if self.truncated:
             parts.append("truncated=1")
+        if self.batch_occupancy is not None:
+            parts.append(f"occupancy={self.batch_occupancy:.3f}")
+        if self.padding_waste is not None:
+            parts.append(f"padding_waste={self.padding_waste:.3f}")
         return ";".join(parts)
 
 
@@ -80,6 +107,9 @@ def stats_from_completions(
     truncated: bool = False,
     dispatch_overhead_us: float | None = None,
     n_lanes: int | None = None,
+    batch_occupancy: float | None = None,
+    padding_waste: float | None = None,
+    n_batches: int | None = None,
 ) -> LatencyStats:
     measured = [c for c in completions if not c.warmup]
     warmup = len(completions) - len(measured)
@@ -94,6 +124,26 @@ def stats_from_completions(
         1e-9,
     )
     good = len(measured) if slo_us is None else int((lat <= slo_us).sum())
+    by_bucket: dict[str, list[float]] = {}
+    for c in measured:
+        if c.bucket is not None:
+            by_bucket.setdefault(c.bucket, []).append(c.latency_us)
+    bucket_stats = (
+        tuple(
+            (
+                label,
+                BucketStats(
+                    requests=len(lats),
+                    p50_us=float(np.percentile(lats, 50)),
+                    p95_us=float(np.percentile(lats, 95)),
+                    p99_us=float(np.percentile(lats, 99)),
+                ),
+            )
+            for label, lats in sorted(by_bucket.items())
+        )
+        if by_bucket
+        else None
+    )
     return LatencyStats(
         requests=len(measured),
         warmup_requests=warmup,
@@ -108,6 +158,10 @@ def stats_from_completions(
         truncated=truncated,
         dispatch_overhead_us=dispatch_overhead_us,
         lane_qps=lane_qps_from_completions(completions, n_lanes=n_lanes),
+        bucket_stats=bucket_stats,
+        batch_occupancy=batch_occupancy,
+        padding_waste=padding_waste,
+        n_batches=n_batches,
     )
 
 

@@ -29,13 +29,23 @@ Two canonical load models (the Milabench / serving-benchmark split):
 Warmup exclusion: the first ``warmup`` requests of either schedule are
 flagged ``warmup=True``; latency statistics (``serve.latency``) drop them,
 mirroring ``harness.time_fn``'s warmup iterations.
+
+Mixed-shape traffic rides on top of either generator: :func:`sample_mix`
+assigns every request a shape-bucket label drawn from a weighted
+distribution with its *own* seeded stream (the arrival offsets are
+untouched, so adding a mix never perturbs the arrival process), and
+:func:`save_trace` / :func:`load_trace` persist the resulting
+arrival+shape stream as replayable JSONL — two runs that load one trace
+serve the identical request sequence, whatever their dispatch policy.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import heapq
-from typing import Iterator, Sequence, overload
+import json
+import os
+from typing import Iterator, Mapping, Sequence, overload
 
 import numpy as np
 
@@ -46,17 +56,28 @@ __all__ = [
     "open_loop_lane_schedules",
     "merge_schedules",
     "closed_loop_schedule",
+    "sample_mix",
+    "save_trace",
+    "load_trace",
 ]
+
+# Entropy appended to the plan seed for the shape-mix stream, so bucket
+# draws are deterministic per seed yet independent of the arrival draws
+# (the arrival stream is identical with and without a mix).
+_MIX_STREAM = 0x5AAB
 
 
 @dataclasses.dataclass(frozen=True)
 class Request:
     """One generated request: arrival offset seconds from serve start
-    (0.0 for closed-loop, where issue time is execution-driven)."""
+    (0.0 for closed-loop, where issue time is execution-driven), plus the
+    shape-bucket label its inputs are drawn from (None = the single
+    measure-stage shape)."""
 
     index: int
     arrival_s: float = 0.0
     warmup: bool = False
+    bucket: str | None = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -211,6 +232,110 @@ def closed_loop_schedule(n_requests: int, *, warmup: int = 0) -> tuple[Request, 
     return tuple(
         Request(index=i, arrival_s=0.0, warmup=i < warmup)
         for i in range(n_requests)
+    )
+
+
+def sample_mix(
+    schedule: Schedule,
+    mix: Sequence[tuple[str, float]] | Mapping[str, float],
+    *,
+    seed: int = 0,
+) -> Schedule:
+    """Assign every request a shape-bucket label drawn from ``mix``.
+
+    ``mix`` maps bucket label -> weight (weights need not sum to 1; they
+    are normalized). Draws come from a dedicated stream seeded by
+    ``(seed, _MIX_STREAM)`` — deterministic per seed, and independent of
+    the arrival draws, so the arrival offsets of ``schedule`` are
+    returned untouched. Bucket *order* matters for reproducibility:
+    mappings are sorted by label first.
+    """
+    if isinstance(mix, Mapping):
+        entries = sorted(mix.items())
+    else:
+        entries = list(mix)
+    if not entries:
+        raise ValueError("sample_mix needs at least one bucket")
+    labels = [label for label, _ in entries]
+    weights = np.array([w for _, w in entries], dtype=np.float64)
+    if not (weights > 0).all():
+        raise ValueError(f"mix weights must be > 0, got {entries}")
+    rng = np.random.default_rng(np.random.SeedSequence([seed, _MIX_STREAM]))
+    picks = rng.choice(len(labels), size=len(schedule), p=weights / weights.sum())
+    requests = tuple(
+        dataclasses.replace(req, bucket=labels[int(pick)])
+        for req, pick in zip(schedule.requests, picks)
+    )
+    return dataclasses.replace(schedule, requests=requests)
+
+
+def save_trace(schedule: Schedule, path: str) -> None:
+    """Persist a schedule as a replayable JSONL trace.
+
+    Line 1 is a header object (``offered_qps``, ``truncated``, request
+    count); every following line is one request (index / arrival_s /
+    bucket / warmup). The format is append-only JSONL so traces diff and
+    stream like the report files do.
+    """
+    parent = os.path.dirname(path)
+    if parent:
+        os.makedirs(parent, exist_ok=True)
+    with open(path, "w", encoding="utf-8") as fh:
+        header = {
+            "kind": "serve-trace",
+            "offered_qps": schedule.offered_qps,
+            "truncated": schedule.truncated,
+            "requests": len(schedule),
+        }
+        fh.write(json.dumps(header) + "\n")
+        for req in schedule:
+            fh.write(
+                json.dumps(
+                    {
+                        "index": req.index,
+                        "arrival_s": req.arrival_s,
+                        "bucket": req.bucket,
+                        "warmup": req.warmup,
+                    }
+                )
+                + "\n"
+            )
+
+
+def load_trace(path: str) -> Schedule:
+    """Load a trace saved by :func:`save_trace` back into a
+    :class:`Schedule` (bucket labels and warmup flags included) — the
+    replay is exact, so loop/lanes/batcher runs over one trace serve the
+    identical request stream."""
+    with open(path, encoding="utf-8") as fh:
+        lines = [line for line in fh if line.strip()]
+    if not lines:
+        raise ValueError(f"trace {path!r} is empty")
+    header = json.loads(lines[0])
+    if header.get("kind") != "serve-trace":
+        raise ValueError(
+            f"trace {path!r} does not look like a serve trace "
+            f"(header kind={header.get('kind')!r})"
+        )
+    requests = tuple(
+        Request(
+            index=rec["index"],
+            arrival_s=rec["arrival_s"],
+            warmup=bool(rec.get("warmup", False)),
+            bucket=rec.get("bucket"),
+        )
+        for rec in map(json.loads, lines[1:])
+    )
+    declared = header.get("requests")
+    if declared is not None and declared != len(requests):
+        raise ValueError(
+            f"trace {path!r} is truncated on disk: header says "
+            f"{declared} requests, file has {len(requests)}"
+        )
+    return Schedule(
+        requests=requests,
+        offered_qps=header.get("offered_qps"),
+        truncated=bool(header.get("truncated", False)),
     )
 
 

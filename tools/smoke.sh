@@ -25,12 +25,18 @@
 # impl/tuned_params/tune_trials>0 and the warm run restored every tuned
 # winner AND every executable — zero XLA compiles, zero tune trials.
 #
+# With --batching, instead run the continuous-batching smoke: a dynamic
+# mixed-shape serve under --cache-dir twice (cold stores one executable
+# per (shape bucket, batch width); warm restores every one of them with
+# zero retraces and zero XLA compiles), then a loop-dispatch run
+# replaying the *same* saved trace, asserting the dynamic batcher's
+# goodput strictly beats the sync loop's at identical offered load.
+#
 # With --bench [PATH], instead write the perf-trajectory artifact
-# (default artifacts/BENCH_6.json): per-workload xla vs pallas vs
-# tuned-pallas per-call microseconds over the kernel-backed slice, the
-# tuned run's wall time cold vs warm under --cache-dir, and the warm
-# run's cache counters (zero compiles, zero tune trials), so future PRs
-# have a baseline.
+# (default artifacts/BENCH_7.json): loop vs lanes vs dynamic-batcher
+# latency/goodput over one fixed seeded mixed-shape trace (the
+# fig_batching comparison), asserting dynamic goodput strictly beats
+# loop goodput, so future PRs have a baseline.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -253,101 +259,126 @@ PY
   exit 0
 fi
 
-if [[ "${1:-}" == "--bench" ]]; then
-  bench_path="${2:-artifacts/BENCH_6.json}"
+if [[ "${1:-}" == "--batching" ]]; then
   cache="$out/cache"
+  trace="$out/mix_trace.jsonl"
+  mix="0/cols=64@2,0/cols=128@1"
+  common=(--names pathfinder --preset 0 --iters 1 --warmup 0 --no-backward
+    --serve open --qps 45000 --serve-duration 0.5 --concurrency 16
+    --serve-mix "$mix" --serve-trace "$trace" --slo-us 20000
+    --max-batch 8 --batch-latency-budget 1000)
 
-  python - "$cache" "$out" "$bench_path" <<'PY'
-import json
-import os
+  # Cold: the dynamic batcher compiles one executable per (bucket, width)
+  # through the two-tier cache — and saves the generated trace.
+  python -m repro.core.suite "${common[@]}" --serve-dispatch dynamic \
+    --cache-dir "$cache" --jsonl "$out/dyn_cold.jsonl" 2> "$out/dyn_cold.err" \
+    || { cat "$out/dyn_cold.err" >&2; exit 1; }
+  grep '^# hlocache:' "$out/dyn_cold.err"
+  # Warm: the same run (now replaying the trace) restores every bucket.
+  python -m repro.core.suite "${common[@]}" --serve-dispatch dynamic \
+    --cache-dir "$cache" --jsonl "$out/dyn_warm.jsonl" 2> "$out/dyn_warm.err" \
+    || { cat "$out/dyn_warm.err" >&2; exit 1; }
+  grep '^# hlocache:' "$out/dyn_warm.err"
+  # The sync-loop floor, replaying the identical trace (same offered load).
+  python -m repro.core.suite "${common[@]}" --serve-dispatch loop \
+    --jsonl "$out/loop.jsonl"
+
+  python - "$out/dyn_cold.err" "$out/dyn_warm.err" \
+    "$out/dyn_warm.jsonl" "$out/loop.jsonl" <<'PY'
 import re
-import subprocess
 import sys
-import time
 
-cache, out, bench_path = sys.argv[1:4]
-NAMES = ["gemm_f32_nn", "softmax", "lrn", "pooling", "where"]
-base = [
-    sys.executable, "-m", "repro.core.suite", "--names", *NAMES,
-    "--preset", "0", "--iters", "2", "--warmup", "1", "--no-backward",
-]
+from repro.core.results import load_run
 
 
-def run(tag, extra):
-    t0 = time.time()
-    proc = subprocess.run(
-        base + extra + ["--jsonl", f"{out}/{tag}.jsonl"],
-        capture_output=True, text=True, env=dict(os.environ),
-    )
-    wall = time.time() - t0
-    sys.stderr.write(proc.stderr)
-    assert proc.returncode == 0, f"{tag} run failed rc={proc.returncode}"
-    # Only --cache-dir runs print an hlocache summary line.
-    lines = [l for l in proc.stderr.splitlines() if l.startswith("# hlocache:")]
-    line = lines[0] if lines else ""
-    return wall, {k: int(v) for k, v in re.findall(r"(\w+)=(\d+)", line)}, line
+def counters(path):
+    with open(path) as f:
+        (line,) = [l for l in f if l.startswith("# hlocache:")]
+    return {k: int(v) for k, v in re.findall(r"(\w+)=(\d+)", line)}, line
 
-# The three implementation columns, plus a warm rerun of the tuned column
-# to pin the zero-compile/zero-trial property in the artifact.
-run("xla", ["--impl", "xla"])
-run("pallas", ["--impl", "pallas"])
-tuned = ["--impl", "pallas", "--tune", "--cache-dir", cache]
-wall_cold, _, _ = run("tuned_cold", tuned)
-wall_warm, warm, warm_line = run("tuned_warm", tuned)
+cold, cold_line = counters(sys.argv[1])
+warm, warm_line = counters(sys.argv[2])
+# Cold compiles: the measure-stage executable plus 2 buckets x 4 dynamic
+# widths (1, 2, 4, 8) = 9 distinct programs, every one stored.
+assert cold["stores"] == 9, cold_line
+# Warm restores the whole bucket table from the serialized-executable
+# tier: zero retraces, zero XLA compiles, zero fallbacks.
+assert warm["exe_hits"] == cold["stores"], (cold_line, warm_line)
 assert warm["misses"] == 0 and warm["xla_compiles"] == 0, warm_line
-assert warm["tune_hits"] > 0, warm_line
-if wall_warm >= wall_cold:
-    # Wall clock on a shared host is advisory; the zero-compile property
-    # above is the hard check. Record the anomaly instead of failing.
-    print(f"WARNING: warm wall {wall_warm:.1f}s >= cold {wall_cold:.1f}s "
-          "(host contention?)", file=sys.stderr)
+assert warm["fallbacks"] == 0 and warm["exe_fallbacks"] == 0, warm_line
 
-from repro.core.results import load_run  # after the subprocess runs: no jax cost
-
-
-def by_name(tag):
-    _, records = load_run(f"{out}/{tag}.jsonl")
-    ok = {r.name: r for r in records if r.status == "ok"}
-    assert len(ok) == len(NAMES), f"{tag}: {sorted(ok)} vs {NAMES}"
-    return ok
-
-xla, pallas, tuned_warm = by_name("xla"), by_name("pallas"), by_name("tuned_warm")
-assert all((r.tune_trials or 0) == 0 for r in tuned_warm.values()), "warm re-tuned"
-meta, _ = load_run(f"{out}/tuned_warm.jsonl")
-bench = {
-    "bench": "BENCH_6",
-    "what": "impl axis: xla vs pallas vs tuned pallas (autotuned blocks)",
-    "selection": f"names {','.join(NAMES)} preset 0 iters 2 forward-only",
-    "backend": meta.backend,
-    "jax_version": meta.jax_version,
-    "device_count": meta.device_count,
-    "interpret_mode": any(r.impl_interpret for r in pallas.values()),
-    "tuned_wall_s_cold": round(wall_cold, 3),
-    "tuned_wall_s_warm": round(wall_warm, 3),
-    "warm_cache": warm_line.lstrip("# "),
-    "benchmarks": {
-        name: {
-            "xla_us": round(xla[name].us_per_call, 2),
-            "pallas_us": round(pallas[name].us_per_call, 2),
-            "pallas_tuned_us": round(tuned_warm[name].us_per_call, 2),
-            "tuned_speedup_vs_xla": round(
-                xla[name].us_per_call / tuned_warm[name].us_per_call, 3
-            ),
-            "tuned_params": tuned_warm[name].tuned_params,
-        }
-        for name in sorted(xla)
-    },
-}
-os.makedirs(os.path.dirname(bench_path) or ".", exist_ok=True)
-tmp = bench_path + ".tmp"
-with open(tmp, "w") as f:
-    json.dump(bench, f, indent=1, sort_keys=True)
-    f.write("\n")
-os.replace(tmp, bench_path)
-print(f"BENCH_6: {len(NAMES)} workloads x 3 impl columns, tuned "
-      f"cold={wall_cold:.1f}s warm={wall_warm:.1f}s -> {bench_path}")
+_, dyn_records = load_run(sys.argv[3])
+_, loop_records = load_run(sys.argv[4])
+(dyn,) = dyn_records
+(loop,) = loop_records
+for tag, rec in (("dynamic", dyn), ("loop", loop)):
+    assert rec.status == "ok", (tag, rec.error)
+    assert rec.serve_dispatch == tag, rec.serve_dispatch
+    assert rec.serve_mix == "p0/cols=64@2,p0/cols=128@1", rec.serve_mix
+    assert rec.batch_occupancy and 0 < rec.batch_occupancy <= 1.0, rec
+    assert rec.serve_batches and rec.goodput_qps, rec
+    assert rec.bucket_latency_us and set(rec.bucket_latency_us) == {
+        "p0/cols=64", "p0/cols=128"}, rec.bucket_latency_us
+# Identical replayed trace -> identical offered load and request count.
+assert dyn.serve_requests == loop.serve_requests, (dyn, loop)
+assert dyn.offered_qps == loop.offered_qps, (dyn, loop)
+# Coalescing is the point: far fewer device programs than requests, and
+# strictly more goodput than the sync loop under the same SLO.
+assert dyn.serve_batches < loop.serve_batches, (dyn.serve_batches,
+                                                loop.serve_batches)
+assert dyn.goodput_qps > loop.goodput_qps, (dyn.goodput_qps,
+                                            loop.goodput_qps)
+print(f"batching smoke: {warm['exe_hits']} bucket executables restored "
+      f"warm with 0 XLA compiles; dynamic goodput {dyn.goodput_qps:.0f} "
+      f"qps > loop {loop.goodput_qps:.0f} qps over {dyn.serve_requests} "
+      f"replayed requests ({dyn.serve_batches} vs {loop.serve_batches} "
+      "device programs)")
 PY
   exit 0
+fi
+
+if [[ "${1:-}" == "--bench" ]]; then
+  bench_path="${2:-artifacts/BENCH_7.json}"
+  cache="$out/cache"
+
+  # The fig_batching comparison: one fixed seeded mixed-shape trace
+  # (generated by the first policy, replayed by the rest), loop vs lanes
+  # vs dynamic at the same offered load. Two attempts: the acceptance
+  # inequality (dynamic goodput > loop goodput) has a 3-5x margin at
+  # these knobs, so one retry covers a pathological scheduling hiccup.
+  for attempt in 1 2; do
+    if python benchmarks/fig_batching.py \
+        --trace "$out/bench_trace_$attempt.jsonl" \
+        --json "$bench_path"; then
+      if python - "$bench_path" <<'PY'
+import json
+import sys
+
+with open(sys.argv[1]) as f:
+    bench = json.load(f)
+modes = bench["modes"]
+assert set(modes) >= {"loop", "lanes", "dynamic"}, sorted(modes)
+dyn, loop = modes["dynamic"], modes["loop"]
+for mode, m in modes.items():
+    assert m["goodput_qps"] >= 0 and m["batches"] > 0, (mode, m)
+# The acceptance inequality: the continuous batcher strictly beats the
+# sync loop at identical offered mixed-shape load, under the same SLO.
+assert dyn["goodput_qps"] > loop["goodput_qps"], (dyn, loop)
+assert dyn["batches"] < loop["batches"], (dyn, loop)
+print(f"BENCH_7: dynamic goodput {dyn['goodput_qps']:.0f} qps > loop "
+      f"{loop['goodput_qps']:.0f} qps "
+      f"({bench['dynamic_over_loop_goodput']}x) at "
+      f"{bench['offered_qps']:.0f} offered qps, mix {bench['mix']} "
+      f"-> {sys.argv[1]}")
+PY
+      then
+        exit 0
+      fi
+    fi
+    echo "BENCH_7 attempt $attempt failed; retrying" >&2
+  done
+  echo "BENCH_7: dynamic goodput did not beat loop in 2 attempts" >&2
+  exit 1
 fi
 
 python -m repro.core.suite \
