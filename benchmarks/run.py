@@ -9,6 +9,7 @@ Prints ``name,us_per_call,derived`` CSV. Sections:
   fig_concurrency — dispatch-lane speedup + co-location interference
   fig_batching — continuous batching: loop vs lanes vs dynamic goodput
   fig_impl — XLA vs Pallas implementation axis (autotuned block sizes)
+  fig_trace — per-stage engine time breakdown (obs layer, schema v8)
   table2   — per-layer kernel classification (Table II)
   feat_*   — §V-B modern-feature studies (HyperQ / UM / CG / DP analogues)
   roofline — §Roofline table from the multi-pod dry-run artifacts
@@ -40,6 +41,7 @@ SECTION_NAMES = (
     "fig_concurrency",
     "fig_batching",
     "fig_impl",
+    "fig_trace",
     "table2",
     "feat_hyperq",
     "feat_unified_memory",
@@ -77,6 +79,7 @@ def main(argv=None) -> int:
         fig_concurrency,
         fig_impl,
         fig_scaling,
+        fig_trace,
         roofline_table,
         table1_suite,
         table2_dnn_kernels,
@@ -92,6 +95,7 @@ def main(argv=None) -> int:
         "fig_concurrency": lambda: fig_concurrency.rows(preset=args.preset),
         "fig_batching": lambda: fig_batching.rows(preset=args.preset),
         "fig_impl": lambda: fig_impl.rows(preset=args.preset),
+        "fig_trace": lambda: fig_trace.rows(preset=args.preset),
         "table2": lambda: table2_dnn_kernels.rows(preset=max(args.preset, 1)),
         "feat_hyperq": feat_hyperq.rows,
         "feat_unified_memory": feat_unified_memory.rows,

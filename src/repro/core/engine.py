@@ -108,6 +108,7 @@ from repro.core.results import (
     RunMetadata,
     write_report,
 )
+from repro.obs import NULL_TRACER, NullTracer, Tracer, use_tracer
 
 __all__ = ["CompileCache", "Engine", "RunResult", "SweepStat"]
 
@@ -191,6 +192,7 @@ class Engine:
         self,
         cache: CompileCache | None = None,
         cache_dir: str | None = None,
+        tracer: Tracer | NullTracer | None = None,
     ) -> None:
         self.cache = cache if cache is not None else CompileCache()
         # Optional cross-process persistence of compile artifacts (two
@@ -198,6 +200,12 @@ class Engine:
         # entries skip retracing, and usually XLA compilation too. None =
         # in-process only.
         self.disk_cache = HloDiskCache(cache_dir) if cache_dir else None
+        # Structured tracing (repro.obs): every _stage_* becomes a span,
+        # serve completions and batch executions become retrospective
+        # events, and counter totals land in the final RunMetadata.
+        # Default NULL_TRACER: falsy, no-op spans, swallowed counters —
+        # the disabled cost at a guarded call site is one attribute read.
+        self.tracer = tracer if tracer is not None else NULL_TRACER
         if cache_dir:
             _enable_jax_persistent_cache(cache_dir)
 
@@ -443,20 +451,33 @@ class Engine:
             won = self.disk_cache.load_tuned(base_key)
             if won is not None:
                 return won, 0, 0.0
-        t0 = time.perf_counter()
         best_us: float | None = None
         best: dict = {}
         trials = 0
+        # tune_trials_us is the *sum of the per-candidate trial spans* —
+        # each trial's wall time is measured once (c0/c1 below), added to
+        # the total, and emitted as a trace event from the same pair, so
+        # the record's number and the trace can never disagree.
+        trials_us = 0.0
+        tracer = self.tracer
         for cand in space:
+            c0 = time.perf_counter()
             entry = self._stage_compile(
                 spec, workload, args, plan, preset, backward, placement,
                 impl, dict(cand),
             )
             mean_us = self._time_tune_trial(entry, args, plan)
+            c1 = time.perf_counter()
+            trials_us += (c1 - c0) * 1e6
             trials += 1
+            if tracer.enabled:
+                tracer.event(
+                    "tune.trial", t_start=c0, t_end=c1, track="engine",
+                    bench=spec.name, params=dict(cand), mean_us=mean_us,
+                )
+                tracer.counters.inc("tune.trials")
             if best_us is None or mean_us < best_us:
                 best_us, best = mean_us, dict(cand)
-        trials_us = (time.perf_counter() - t0) * 1e6
         if use_disk:
             self.disk_cache.store_tuned(base_key, best, trials, trials_us)
         return best, trials, trials_us
@@ -516,6 +537,44 @@ class Engine:
 
     # -- serving -----------------------------------------------------------
 
+    def _trace_completions(self, completions) -> None:
+        """Retrospective per-request trace events, one per completion,
+        attributed to its dispatch lane (``serve`` track, one tid per
+        lane). Emitted *after* the serving run from timestamps the lanes
+        already recorded — the serve hot path is never instrumented."""
+        tracer = self.tracer
+        if not tracer.enabled:
+            return
+        for c in completions:
+            attrs = {"index": c.index, "warmup": c.warmup}
+            if c.bucket is not None:
+                attrs["bucket"] = c.bucket
+            tracer.event(
+                "request", t_start=c.t_submit, t_end=c.t_done,
+                track="serve", tid=f"lane {c.lane}", **attrs,
+            )
+        tracer.counters.inc("serve.requests", len(completions))
+
+    def _trace_batches(self, report) -> None:
+        """Retrospective per-batch events from a ``BatchReport``: one
+        span per dispatched device program on the ``batcher`` track (one
+        tid per bucket queue), plus the flush/expiry/padding counters."""
+        tracer = self.tracer
+        if not tracer.enabled:
+            return
+        counters = tracer.counters
+        for b in report.batches:
+            tracer.event(
+                f"batch[{b.width}]", t_start=b.t_dispatch, t_end=b.t_done,
+                track="batcher", tid=f"queue {b.bucket}",
+                width=b.width, filled=b.filled, cause=b.cause,
+            )
+            counters.inc("batcher.flushes")
+            if b.cause == "expired":
+                counters.inc("batcher.budget_expiries")
+            counters.inc("batcher.dispatched_slots", b.width)
+            counters.inc("batcher.padded_slots", b.width - b.filled)
+
     def _serve_call(self, call, serve: ServeSpec, seed: int):
         """One isolated serving run of an already-compiled callable.
 
@@ -552,6 +611,7 @@ class Engine:
                 result = run_open_loop_threaded(
                     call, lane_schedules, concurrency=serve.concurrency
                 )
+                self._trace_completions(result.completions)
                 return stats_from_completions(
                     result.completions,
                     offered_qps=serve.qps,
@@ -569,6 +629,7 @@ class Engine:
             completions = run_open_loop(
                 call, schedule, n_lanes=serve.lanes, concurrency=serve.concurrency
             )
+            self._trace_completions(completions)
             return stats_from_completions(
                 completions,
                 offered_qps=serve.qps,
@@ -584,6 +645,7 @@ class Engine:
                 duration_s=serve.duration_s,
                 warmup=warmup,
             )
+            self._trace_completions(result.completions)
             return stats_from_completions(
                 result.completions,
                 slo_us=serve.slo_us,
@@ -597,6 +659,7 @@ class Engine:
             duration_s=serve.duration_s,
             warmup=warmup,
         )
+        self._trace_completions(completions)
         return stats_from_completions(
             completions, slo_us=serve.slo_us, n_lanes=serve.lanes
         )
@@ -791,6 +854,8 @@ class Engine:
                 budget_s=serve.batch_budget_us / 1e6,
                 concurrency=serve.concurrency,
             )
+        self._trace_completions(report.completions)
+        self._trace_batches(report)
         return stats_from_completions(
             report.completions,
             # A replayed trace's offered load is the trace's, not the
@@ -999,20 +1064,26 @@ class Engine:
         if verbose:
             print(BenchmarkRecord.csv_header(), flush=True)
         try:
-            for devices in plan.device_sweep:
-                misses0, hits0 = self.cache.misses, self.cache.hits
-                for spec in specs:
-                    for rec in self._run_benchmark(spec, plan, devices):
-                        emit(rec)
-                sweep_stats.append(
-                    SweepStat(
-                        devices=devices,
-                        misses=self.cache.misses - misses0,
-                        hits=self.cache.hits - hits0,
+            # The engine's tracer becomes the ambient one for the run, so
+            # the serve layer (lane workers, batcher) reaches it without
+            # a parameter threaded through every client signature.
+            with use_tracer(self.tracer):
+                for devices in plan.device_sweep:
+                    misses0, hits0 = self.cache.misses, self.cache.hits
+                    for spec in specs:
+                        for rec in self._run_benchmark(spec, plan, devices):
+                            emit(rec)
+                    sweep_stats.append(
+                        SweepStat(
+                            devices=devices,
+                            misses=self.cache.misses - misses0,
+                            hits=self.cache.hits - hits0,
+                        )
                     )
-                )
         finally:
+            metadata = self._final_metadata(metadata)
             if writer is not None:
+                writer.write_meta(metadata)
                 writer.close()
         if verbose and self.disk_cache is not None:
             # A disk cache that never hits is otherwise invisible: say what
@@ -1027,34 +1098,84 @@ class Engine:
             sweep_stats=sweep_stats,
         )
 
+    def _final_metadata(self, metadata: RunMetadata) -> RunMetadata:
+        """End-of-run observability stamped into the (frozen) metadata:
+        the disk cache's counter totals whenever a --cache-dir was in
+        play — committed reports must show whether the run was warm,
+        which `verbose` stdout alone cannot — and the obs counter
+        snapshot (cache totals folded in under a ``cache.`` prefix) when
+        tracing was on."""
+        cache_stats = (
+            self.disk_cache.counter_dict()
+            if self.disk_cache is not None
+            else None
+        )
+        if self.tracer.enabled and cache_stats:
+            for k, v in cache_stats.items():
+                # set, not inc: the disk cache accumulates across runs of
+                # a long-lived engine; incrementing would double-count.
+                self.tracer.counters.set(f"cache.{k}", v)
+        counters = (
+            self.tracer.counters.snapshot() if self.tracer.enabled else None
+        )
+        if cache_stats is None and counters is None:
+            return metadata
+        return dataclasses.replace(
+            metadata, cache_stats=cache_stats, counters=counters
+        )
+
+    @contextlib.contextmanager
+    def _timed_stage(self, name: str, timings: dict, **attrs: Any):
+        """One engine stage = one tracer span + one ``stage_timings_us``
+        entry, from a single perf_counter pair. The timing lands even
+        when the stage raises, so error records still say where the time
+        went. The dict entry is always written (tracing on or off):
+        per-stage wall time is a record column, not just a trace row."""
+        t0 = time.perf_counter()
+        try:
+            with self.tracer.span(name, **attrs):
+                yield
+        finally:
+            timings[name] = (time.perf_counter() - t0) * 1e6
+
     def _run_benchmark(
         self, spec: BenchmarkSpec, plan: ExecutionPlan, devices: int
     ) -> list[BenchmarkRecord]:
         preset = plan.resolve_preset(spec)
         requested = plan.placement_at(devices)
+        # Build/place run once per benchmark and their timings are copied
+        # into every pass's stage_timings_us (the passes share the work).
+        base_timings: dict[str, float] = {}
         try:
-            workload, args = self._stage_build(spec, plan, preset)
+            with self._timed_stage(
+                "build", base_timings, bench=spec.name, devices=devices
+            ):
+                workload, args = self._stage_build(spec, plan, preset)
         except Exception as e:  # noqa: BLE001 — fault isolation is the contract
-            return [
-                BenchmarkRecord.from_error(
-                    spec, preset, stage="build", error=_err_text(e),
-                    devices=devices, placement=requested.mode,
-                )
-            ]
+            rec = BenchmarkRecord.from_error(
+                spec, preset, stage="build", error=_err_text(e),
+                devices=devices, placement=requested.mode,
+            )
+            rec.stage_timings_us = dict(base_timings)
+            return [rec]
         try:
-            args, placement = self._stage_place(workload, args, requested)
+            with self._timed_stage(
+                "place", base_timings, bench=spec.name, devices=devices
+            ):
+                args, placement = self._stage_place(workload, args, requested)
         except Exception as e:  # noqa: BLE001 — fault isolation is the contract
-            return [
-                BenchmarkRecord.from_error(
-                    spec, preset, stage="place", error=_err_text(e),
-                    devices=devices, placement=requested.mode,
-                )
-            ]
+            rec = BenchmarkRecord.from_error(
+                spec, preset, stage="place", error=_err_text(e),
+                devices=devices, placement=requested.mode,
+            )
+            rec.stage_timings_us = dict(base_timings)
+            return [rec]
         out: list[BenchmarkRecord] = []
         for backward in plan.passes(workload):
             out.extend(
                 self._run_pass(
-                    spec, workload, args, plan, preset, backward, placement
+                    spec, workload, args, plan, preset, backward, placement,
+                    base_timings,
                 )
             )
         return out
@@ -1068,23 +1189,39 @@ class Engine:
         preset: int,
         backward: bool,
         placement: Placement,
+        base_timings: dict[str, float] | None = None,
     ) -> list[BenchmarkRecord]:
         stage = "tune"
         impl, impl_fallback = "xla", None
+        # Per-stage wall microseconds for this pass (schema v8). Stages
+        # run back to back, so the dict's sum tracks the pass's wall time
+        # by construction; the _timed_stage helper fills it whether or
+        # not tracing is on, and keeps filling it when a stage raises, so
+        # error records carry the partial breakdown too.
+        timings: dict[str, float] = dict(base_timings or {})
+        span_attrs = dict(bench=_pass_name(workload, backward))
         try:
             impl, impl_fallback = self._resolve_impl(workload, plan, backward)
-            tuned_params, tune_trials, tune_trials_us = self._stage_tune(
-                spec, workload, args, plan, preset, backward, placement, impl
-            )
+            span_attrs["impl"] = impl
+            with self._timed_stage("tune", timings, **span_attrs):
+                tuned_params, tune_trials, tune_trials_us = self._stage_tune(
+                    spec, workload, args, plan, preset, backward, placement,
+                    impl,
+                )
             stage = "compile"
-            entry = self._stage_compile(
-                spec, workload, args, plan, preset, backward, placement,
-                impl, tuned_params,
-            )
+            with self._timed_stage("compile", timings, **span_attrs):
+                entry = self._stage_compile(
+                    spec, workload, args, plan, preset, backward, placement,
+                    impl, tuned_params,
+                )
             stage = "measure"
-            timing = self._stage_measure(workload, entry, args, plan, backward)
+            with self._timed_stage("measure", timings, **span_attrs):
+                timing = self._stage_measure(
+                    workload, entry, args, plan, backward
+                )
             stage = "characterize"
-            info = self._stage_characterize(workload, entry, backward)
+            with self._timed_stage("characterize", timings, **span_attrs):
+                info = self._stage_characterize(workload, entry, backward)
             rec = BenchmarkRecord.from_measurement(
                 spec, preset, timing, info,
                 devices=placement.devices, placement=placement.mode,
@@ -1100,15 +1237,17 @@ class Engine:
                 tune_trials=tune_trials,
                 tune_trials_us=tune_trials_us,
             )
+            rec.stage_timings_us = timings
             extra: list[BenchmarkRecord] = []
             # Serving measures request-level concurrency of the forward
             # pass; backward rows keep their isolation-mode semantics.
             if plan.serve is not None and not backward:
                 stage = "serve"
-                stats, colocate, slowdown, extra = self._stage_serve(
-                    spec, entry, args, plan, preset, placement,
-                    impl, tuned_params,
-                )
+                with self._timed_stage("serve", timings, **span_attrs):
+                    stats, colocate, slowdown, extra = self._stage_serve(
+                        spec, entry, args, plan, preset, placement,
+                        impl, tuned_params,
+                    )
                 rec.apply_serve(
                     stats,
                     mode=plan.serve.mode,
@@ -1121,13 +1260,13 @@ class Engine:
                 )
             return [rec] + extra
         except Exception as e:  # noqa: BLE001 — fault isolation is the contract
-            return [
-                BenchmarkRecord.from_error(
-                    spec, preset, stage=stage, error=_err_text(e), backward=backward,
-                    devices=placement.devices, placement=placement.mode,
-                    impl=impl,
-                )
-            ]
+            err = BenchmarkRecord.from_error(
+                spec, preset, stage=stage, error=_err_text(e), backward=backward,
+                devices=placement.devices, placement=placement.mode,
+                impl=impl,
+            )
+            err.stage_timings_us = timings
+            return [err]
 
 
 def _enable_jax_persistent_cache(cache_dir: str) -> None:

@@ -205,6 +205,26 @@ class HloDiskCache:
         if len(self.skip_reasons) < _MAX_REASONS:
             self.skip_reasons.append(self.last_skip)
 
+    def counter_dict(self) -> dict[str, int]:
+        """The numeric counter totals as a plain dict — what the engine
+        stamps into ``RunMetadata.cache_stats`` (schema v8) so a committed
+        JSONL report says whether the run was warm without verbose stdout.
+        Numbers only; the reason strings stay on the object / summary()."""
+        return {
+            "hits": self.hits,
+            "exe_hits": self.exe_hits,
+            "hlo_hits": self.hlo_hits,
+            "misses": self.misses,
+            "stores": self.stores,
+            "exe_stores": self.exe_stores,
+            "xla_compiles": self.xla_compiles,
+            "fallback_count": self.fallback_count,
+            "exe_fallbacks": self.exe_fallbacks,
+            "skips": self.skips,
+            "tune_hits": self.tune_hits,
+            "tune_stores": self.tune_stores,
+        }
+
     def summary(self) -> str:
         """One-line cache diagnosis for verbose engine output."""
         line = (

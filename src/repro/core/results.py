@@ -65,7 +65,17 @@ __all__ = [
 #     serve_batches (device programs dispatched), bucket_latency_us
 #     (per-bucket requests + p50/p95/p99 keyed by bucket label); the
 #     ServeSpec in RunMetadata carries dispatch/mix/trace/batch knobs.
-SCHEMA_VERSION = 7
+# v8: observability — stage_timings_us (per-stage wall microseconds for
+#     the row: build/place/tune/compile/measure/characterize/serve —
+#     always collected, tracing on or off); RunMetadata carries
+#     cache_stats (the HloDiskCache counter totals, so committed reports
+#     show whether a run was warm) and counters (the obs layer's counter
+#     snapshot: cache traffic, tune trials, batcher flushes/expiries/
+#     padding, lane submit-block time — None when tracing was off). The
+#     JSONL writer re-emits the final metadata as a second meta line at
+#     close (load_run is last-meta-wins), so streamed reports carry
+#     end-of-run counter totals without giving up streaming.
+SCHEMA_VERSION = 8
 
 
 class ReportError(ValueError):
@@ -189,6 +199,13 @@ class BenchmarkRecord:
     # bucket label -> {"requests", "p50_us", "p95_us", "p99_us"}; a plain
     # dict (not a dataclass) so JSON round-trips it unchanged.
     bucket_latency_us: dict | None = None
+    # Observability (schema v8): stage name -> wall microseconds this row
+    # spent in that stage (build/place shared timings are copied into
+    # every pass's row). Always collected — the perf_counter pairs cost
+    # nanoseconds — so committed reports explain where time went even
+    # without --trace-out. None only on pre-v8 rows and serve-only
+    # partner rows.
+    stage_timings_us: dict | None = None
 
     def apply_serve(
         self,
@@ -465,6 +482,15 @@ class RunMetadata:
     timing_window: int = 1  # 1 = sync-only (pre-v5 runs)
     impl: str = "xla"  # the plan's requested implementation axis
     tune: bool = False  # whether the autotune stage was enabled
+    # Observability (schema v8), stamped at end of run — None at capture
+    # time and on pre-v8 reports. cache_stats is the HloDiskCache counter
+    # totals (exe_hits/hlo_hits/xla_compiles/fallback_count/skips/...),
+    # present whenever the run had a --cache-dir, so a committed report
+    # says whether the run was warm without needing verbose stdout.
+    # counters is the obs layer's counter snapshot, present when tracing
+    # was enabled.
+    cache_stats: dict | None = None
+    counters: dict | None = None
 
     def __post_init__(self) -> None:
         # JSON round-trips tuples as lists and nested dataclasses as dicts;
@@ -541,6 +567,14 @@ class JsonlReportWriter:
 
     def write(self, record: BenchmarkRecord) -> None:
         self._emit({"kind": "record", **dataclasses.asdict(record)})
+
+    def write_meta(self, metadata: RunMetadata) -> None:
+        """Emit a(nother) meta line. ``load_run`` is last-meta-wins, so
+        the engine re-emits the final metadata — with end-of-run cache
+        stats and counter totals — just before close, and readers of a
+        *complete* report see the stamped version while a killed run
+        still has the header line from open time."""
+        self._emit({"kind": "meta", **dataclasses.asdict(metadata)})
 
     def close(self) -> None:
         if not self._f.closed:

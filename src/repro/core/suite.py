@@ -64,6 +64,7 @@ import sys
 from typing import Any, Mapping, Sequence
 
 from repro.core.engine import Engine
+from repro.obs import Tracer
 from repro.core.plan import (
     IMPLS,
     PLACEMENT_MODES,
@@ -107,6 +108,20 @@ examples:
   # later runs (any --serve-dispatch) replay the identical trace
   python -m repro.core.suite --names pathfinder --serve open --qps 500 \\
       --serve-mix "0@2,1@1" --serve-trace /tmp/mix.jsonl --serve-dispatch loop
+  # structured tracing: every engine stage, serve request, and batcher
+  # flush becomes a span in a Chrome trace-event file
+  python -m repro.core.suite --names gemm_f32_nn --serve closed \\
+      --concurrency 8 --lanes 4 --trace-out run.trace.json
+
+reading the trace in Perfetto:
+  open https://ui.perfetto.dev (or chrome://tracing) and load the
+  --trace-out file. The "engine" process holds one track of stage spans
+  (build / place / tune / compile / measure / characterize / serve) with
+  bench + impl attributes on each; the "serve" process has one named
+  track per dispatch lane carrying request enqueue->complete events; the
+  "batcher" process has one track per shape-bucket queue whose batch[N]
+  spans carry width / filled / cause (full | expired | flush). Or skim it
+  from the terminal: python tools/trace_report.py run.trace.json
 
 serving semantics:
   open-loop rows report offered_qps (the target arrival rate); a schedule
@@ -445,10 +460,21 @@ def main(argv: Sequence[str] | None = None) -> int:
     ap.add_argument("--report", type=str, default=None, help="JSON report path")
     ap.add_argument("--jsonl", type=str, default=None,
                     help="streaming JSONL report path (with run metadata)")
+    ap.add_argument("--trace-out", type=str, default=None, metavar="PATH",
+                    help="write a Chrome trace-event JSON file (load in "
+                         "https://ui.perfetto.dev or chrome://tracing, or "
+                         "summarize with tools/trace_report.py): engine "
+                         "stage spans plus per-lane serve requests and "
+                         "per-queue batcher flushes as separate tracks")
     args = ap.parse_args(argv)
+    tracer = Tracer() if args.trace_out else None
     # Engine(cache_dir=...) also points jax's own persistent compilation
     # cache at the directory, so input-builder compiles warm too.
-    engine = Engine(cache_dir=args.cache_dir) if args.cache_dir else None
+    engine = (
+        Engine(cache_dir=args.cache_dir, tracer=tracer)
+        if (args.cache_dir or tracer is not None)
+        else None
+    )
     try:
         records = _run_cli(args, engine)
     except (PlanError, ValueError) as e:
@@ -470,6 +496,14 @@ def main(argv: Sequence[str] | None = None) -> int:
         # A disk cache that never hits is otherwise invisible from the
         # CLI: always say what it did, and why warm loads fell back.
         print(f"# {engine.disk_cache.summary()}", file=sys.stderr)
+    if tracer is not None:
+        n = tracer.export_chrome(args.trace_out)
+        print(
+            f"# trace: {n} spans -> {args.trace_out} "
+            "(load in https://ui.perfetto.dev or chrome://tracing; "
+            "summarize with tools/trace_report.py)",
+            file=sys.stderr,
+        )
     errors = [r for r in records if r.status != "ok"]
     for r in errors:
         print(f"# ERROR {r.name}: {r.error}", file=sys.stderr)

@@ -65,13 +65,18 @@ _POLL_S = 1e-4
 @dataclasses.dataclass(frozen=True)
 class BatchExecution:
     """One dispatched device program: ``width`` slots computed, ``filled``
-    of them carrying real requests (the rest are padding)."""
+    of them carrying real requests (the rest are padding). ``cause`` says
+    *why* the batch went out — ``full`` (the queue could fill the largest
+    width), ``expired`` (the oldest request hit the latency budget), or
+    ``flush`` (end of stream) — so budget expiries are countable in the
+    trace, not inferred from fill ratios."""
 
     bucket: str
     width: int
     filled: int
     t_dispatch: float
     t_done: float
+    cause: str = "full"
 
     def __post_init__(self) -> None:
         if not 1 <= self.filled <= self.width:
@@ -216,7 +221,9 @@ class _InflightBatches:
 
     def __init__(self, max_inflight_requests: int) -> None:
         self.cap = max(1, max_inflight_requests)
-        self._inflight: deque[tuple[list[Request], str, int, float, Any]] = deque()
+        self._inflight: deque[
+            tuple[list[Request], str, int, float, str, Any]
+        ] = deque()
 
     @property
     def inflight_requests(self) -> int:
@@ -224,14 +231,14 @@ class _InflightBatches:
 
     def add(
         self, members: list[Request], bucket: str, width: int,
-        t_dispatch: float, out: Any,
+        t_dispatch: float, cause: str, out: Any,
     ) -> None:
-        self._inflight.append((members, bucket, width, t_dispatch, out))
+        self._inflight.append((members, bucket, width, t_dispatch, cause, out))
 
     def poll(self, t0: float) -> tuple[list[Completion], list[BatchExecution]]:
         done_c: list[Completion] = []
         done_b: list[BatchExecution] = []
-        while self._inflight and _batch_ready(self._inflight[0][4]):
+        while self._inflight and _batch_ready(self._inflight[0][5]):
             c, b = self._finish(t0, *self._inflight.popleft())
             done_c.extend(c)
             done_b.append(b)
@@ -254,7 +261,7 @@ class _InflightBatches:
 
     def _finish(
         self, t0: float, members: list[Request], bucket: str, width: int,
-        t_dispatch: float, out: Any,
+        t_dispatch: float, cause: str, out: Any,
     ) -> tuple[list[Completion], BatchExecution]:
         jax.block_until_ready(out)
         t_done = time.perf_counter()
@@ -267,7 +274,7 @@ class _InflightBatches:
         ]
         batch = BatchExecution(
             bucket=bucket, width=width, filled=len(members),
-            t_dispatch=t_dispatch, t_done=t_done,
+            t_dispatch=t_dispatch, t_done=t_done, cause=cause,
         )
         return completions, batch
 
@@ -303,7 +310,7 @@ def _coalescing_serve(
         completions.extend(pairs[0])
         batches.extend(pairs[1])
 
-    def dispatch(bucket: str) -> None:
+    def dispatch(bucket: str, cause: str) -> None:
         widths = widths_by_bucket[bucket]
         q = queues[bucket]
         take = min(len(q), max(widths))
@@ -317,7 +324,10 @@ def _coalescing_serve(
         ):
             harvest(inflight.pop_oldest(t0))
         t_dispatch = time.perf_counter()
-        inflight.add(members, bucket, width, t_dispatch, _call(calls, bucket, width))
+        inflight.add(
+            members, bucket, width, t_dispatch, cause,
+            _call(calls, bucket, width),
+        )
 
     while i < len(requests) or any(queues.values()) or inflight.inflight_requests:
         now = time.perf_counter()
@@ -339,7 +349,10 @@ def _coalescing_serve(
             full = len(q) >= max(widths_by_bucket[bucket])
             expired = now - (t0 + q[0].arrival_s) >= budget_s
             if full or expired or stream_done:
-                dispatch(bucket)
+                dispatch(
+                    bucket,
+                    "full" if full else ("expired" if expired else "flush"),
+                )
                 dispatched = True
         if dispatched:
             continue

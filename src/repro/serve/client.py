@@ -39,6 +39,7 @@ from typing import Any, Callable, Sequence
 # The client axis is declared next to ServeSpec's validation (one source
 # of truth for "which clients exist"); re-exported here for serve users.
 from repro.core.plan import SERVE_CLIENTS
+from repro.obs import current_tracer
 from repro.serve.lanes import Completion, DispatchLane, lane_depth
 from repro.serve.loadgen import Request, Schedule
 
@@ -183,18 +184,27 @@ def run_open_loop_threaded(
             origin = t0[0]
             done: list[Completion] = []  # lane-local; flushed once
             try:
-                for req in schedule:
-                    target = origin + req.arrival_s
-                    delay = target - time.perf_counter()
-                    if delay > 0:
-                        time.sleep(delay)
-                    d0 = time.perf_counter()
-                    out = call()
-                    tally.dispatch_s += time.perf_counter() - d0
-                    tally.requests += 1
-                    done.extend(lane.submit(out, req, target))
-                    done.extend(lane.poll())
-                done.extend(lane.drain())
+                # One span per lane thread, recorded on the thread that
+                # actually issued — the Chrome trace's tid attribution
+                # for the threaded client comes from here.
+                with current_tracer().span(
+                    "serve.lane",
+                    track="serve",
+                    tid=f"lane {lane_index}",
+                    lane=lane_index,
+                ):
+                    for req in schedule:
+                        target = origin + req.arrival_s
+                        delay = target - time.perf_counter()
+                        if delay > 0:
+                            time.sleep(delay)
+                        d0 = time.perf_counter()
+                        out = call()
+                        tally.dispatch_s += time.perf_counter() - d0
+                        tally.requests += 1
+                        done.extend(lane.submit(out, req, target))
+                        done.extend(lane.poll())
+                    done.extend(lane.drain())
             finally:
                 sink.add(done)
 
@@ -249,23 +259,29 @@ def run_closed_loop_threaded(
             i = 0
             done: list[Completion] = []  # lane-local; flushed once
             try:
-                while time.perf_counter() < deadline:
-                    if cap is not None and i >= cap:
-                        break
-                    req = Request(
-                        index=lane_index + i * n_lanes,
-                        arrival_s=0.0,
-                        warmup=i < per_lane_warmup,
-                    )
-                    t_submit = time.perf_counter()
-                    d0 = t_submit
-                    out = call()
-                    tally.dispatch_s += time.perf_counter() - d0
-                    tally.requests += 1
-                    done.extend(lane.submit(out, req, t_submit))
-                    done.extend(lane.poll())
-                    i += 1
-                done.extend(lane.drain())
+                with current_tracer().span(
+                    "serve.lane",
+                    track="serve",
+                    tid=f"lane {lane_index}",
+                    lane=lane_index,
+                ):
+                    while time.perf_counter() < deadline:
+                        if cap is not None and i >= cap:
+                            break
+                        req = Request(
+                            index=lane_index + i * n_lanes,
+                            arrival_s=0.0,
+                            warmup=i < per_lane_warmup,
+                        )
+                        t_submit = time.perf_counter()
+                        d0 = t_submit
+                        out = call()
+                        tally.dispatch_s += time.perf_counter() - d0
+                        tally.requests += 1
+                        done.extend(lane.submit(out, req, t_submit))
+                        done.extend(lane.poll())
+                        i += 1
+                    done.extend(lane.drain())
             finally:
                 sink.add(done)
 

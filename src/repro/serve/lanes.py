@@ -41,6 +41,7 @@ from typing import Any, Callable, Iterable
 import jax
 
 from repro.core.features import concurrent_instances as batched_call  # noqa: F401
+from repro.obs import current_tracer
 from repro.serve.loadgen import Request
 
 __all__ = [
@@ -105,7 +106,19 @@ class DispatchLane:
         depth, first block on — and return — this lane's oldest result."""
         done = []
         if self.full:
-            done.append(self._finish(*self._inflight.popleft()))
+            # The blocked-submit wall time is the lane-stall signal the
+            # obs layer counts; guarded so the disabled cost is one
+            # attribute read, with no timestamps taken.
+            tracer = current_tracer()
+            if tracer.enabled:
+                b0 = time.perf_counter()
+                done.append(self._finish(*self._inflight.popleft()))
+                tracer.counters.inc(
+                    "lane.submit_block_us", (time.perf_counter() - b0) * 1e6
+                )
+                tracer.counters.inc("lane.submit_blocks")
+            else:
+                done.append(self._finish(*self._inflight.popleft()))
         self._inflight.append((request, t_submit, out))
         return done
 

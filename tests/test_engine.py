@@ -133,10 +133,13 @@ def test_jsonl_report_roundtrip(tmp_path):
     assert [r.name for r in recs] == [r.name for r in res.records]
     assert recs == res.records
     assert load_records(path) == res.records  # generic loader handles JSONL
-    # First line is the meta object, each subsequent line one record.
+    # First line is the meta object, then one line per record, then the
+    # re-emitted final meta (v8: carries cache_stats/counters; loaders
+    # take the last meta line they see).
     lines = [json.loads(l) for l in open(path) if l.strip()]
     assert lines[0]["kind"] == "meta"
-    assert all(l["kind"] == "record" for l in lines[1:])
+    assert all(l["kind"] == "record" for l in lines[1:-1])
+    assert lines[-1]["kind"] == "meta"
 
 
 def test_jsonl_torn_final_line_keeps_completed_rows(tmp_path):

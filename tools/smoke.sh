@@ -32,6 +32,13 @@
 # replaying the *same* saved trace, asserting the dynamic batcher's
 # goodput strictly beats the sync loop's at identical offered load.
 #
+# With --trace, instead run the observability smoke: a small suite slice
+# served through 2 lanes with --trace-out, asserting the trace parses as
+# Chrome trace-event JSON with >=1 span per engine stage and named
+# serve-lane tracks, that every record carries stage_timings_us summing
+# within 10% of the run's wall time, that the final metadata line holds
+# the counter snapshot, and that tools/trace_report.py reads the file.
+#
 # With --bench [PATH], instead write the perf-trajectory artifact
 # (default artifacts/BENCH_7.json): loop vs lanes vs dynamic-batcher
 # latency/goodput over one fixed seeded mixed-shape trace (the
@@ -334,6 +341,78 @@ print(f"batching smoke: {warm['exe_hits']} bucket executables restored "
       f"replayed requests ({dyn.serve_batches} vs {loop.serve_batches} "
       "device programs)")
 PY
+  exit 0
+fi
+
+if [[ "${1:-}" == "--trace" ]]; then
+  export XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}"
+
+  start_ns=$(date +%s%N)
+  python -m repro.core.suite \
+    --levels 0 --preset 0 --iters 1 --warmup 0 --no-backward \
+    --serve closed --concurrency 4 --lanes 2 --serve-duration 0.5 \
+    --serve-client threaded \
+    --trace-out "$out/run.trace.json" --jsonl "$out/trace.jsonl" \
+    2> "$out/trace.err" || { cat "$out/trace.err" >&2; exit 1; }
+  wall_us=$(( ($(date +%s%N) - start_ns) / 1000 ))
+  grep '^# trace:' "$out/trace.err"
+
+  python - "$out/run.trace.json" "$out/trace.jsonl" "$wall_us" <<'PY'
+import json
+import sys
+
+from repro.core.results import load_run
+
+with open(sys.argv[1]) as f:
+    doc = json.load(f)
+events = doc["traceEvents"]
+spans = [e for e in events if e["ph"] == "X"]
+meta_events = [e for e in events if e["ph"] == "M"]
+assert spans and meta_events, "trace missing span or metadata events"
+for ev in spans:
+    assert {"name", "cat", "pid", "tid", "ts", "dur"} <= set(ev), ev
+
+# One track per engine stage: every stage appears at least once.
+stages = {"build", "place", "tune", "compile", "measure",
+          "characterize", "serve"}
+engine_spans = {e["name"] for e in spans if e["cat"] == "engine"}
+missing = stages - engine_spans
+assert not missing, f"engine stages missing from trace: {sorted(missing)}"
+
+# Serve lanes render as named thread tracks carrying request events.
+lane_names = {
+    e["args"]["name"] for e in meta_events if e["name"] == "thread_name"
+}
+assert {"lane 0", "lane 1"} <= lane_names, sorted(lane_names)
+requests = [e for e in spans if e["name"] == "request"]
+assert requests, "no per-request serve events in the trace"
+
+meta, records = load_run(sys.argv[2])
+bad = [r for r in records if r.status != "ok"]
+for r in bad:
+    print(f"ERROR {r.name}: {r.error}", file=sys.stderr)
+assert not bad, f"{len(bad)} error records in the trace smoke"
+assert meta is not None and meta.schema_version >= 8, meta
+assert meta.counters and meta.counters.get("serve.requests", 0) > 0, (
+    meta.counters)
+
+# Every record carries the per-stage breakdown; the stages run back to
+# back inside the run, so their total can only undershoot the run's
+# wall clock — within 10% accounts for selection + report bookkeeping.
+wall_us = int(sys.argv[3])
+total = 0.0
+for r in records:
+    assert r.stage_timings_us, f"{r.name} missing stage_timings_us"
+    assert set(r.stage_timings_us) >= {"build", "compile", "measure"}, r
+    total += sum(r.stage_timings_us.values())
+assert total <= wall_us * 1.10, (total, wall_us)
+print(f"trace smoke: {len(spans)} spans over stages "
+      f"{sorted(engine_spans)}, {len(requests)} request events on "
+      f"{len(lane_names & {'lane 0', 'lane 1'})} lane tracks; stage "
+      f"timings {total/1e6:.2f}s within run wall {wall_us/1e6:.2f}s")
+PY
+
+  python tools/trace_report.py "$out/run.trace.json"
   exit 0
 fi
 

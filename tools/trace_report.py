@@ -1,0 +1,190 @@
+#!/usr/bin/env python
+"""Summarize a --trace-out Chrome trace-event file in the terminal.
+
+Perfetto is the right tool for *looking* at a trace; this is the right
+tool for a CI log or a quick skim: top spans by duration, the engine's
+per-stage time share, and per-lane serve utilization (busy time within
+the lane's active window). Stdlib-only — it reads the JSON the tracer
+wrote and nothing else.
+
+Usage:
+    python tools/trace_report.py run.trace.json [--top N]
+
+Exit codes: 0 ok, 2 the file is not a Chrome trace-event JSON object.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from collections import defaultdict
+
+
+class TraceError(ValueError):
+    """The input is not a readable Chrome trace-event file."""
+
+
+def load_trace(path: str) -> list[dict]:
+    """The trace's event list, validated just enough to report on.
+
+    Accepts the object envelope (``{"traceEvents": [...]}``, what the
+    tracer writes) or the bare-array form Chrome also loads.
+    """
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except OSError as e:
+        raise TraceError(f"cannot read {path}: {e}")
+    except json.JSONDecodeError as e:
+        raise TraceError(f"{path} is not JSON: {e}")
+    events = doc.get("traceEvents") if isinstance(doc, dict) else doc
+    if not isinstance(events, list):
+        raise TraceError(
+            f"{path}: expected a trace-event array or a "
+            '{"traceEvents": [...]} object'
+        )
+    for ev in events:
+        if not isinstance(ev, dict) or "ph" not in ev:
+            raise TraceError(f"{path}: malformed trace event: {ev!r}")
+    return events
+
+
+def _names(events: list[dict]) -> tuple[dict[int, str], dict[tuple, str]]:
+    """(pid -> process name, (pid, tid) -> thread name) from "M" events."""
+    procs: dict[int, str] = {}
+    threads: dict[tuple, str] = {}
+    for ev in events:
+        if ev.get("ph") != "M":
+            continue
+        if ev.get("name") == "process_name":
+            procs[ev["pid"]] = ev.get("args", {}).get("name", str(ev["pid"]))
+        elif ev.get("name") == "thread_name":
+            threads[(ev["pid"], ev.get("tid"))] = ev.get("args", {}).get(
+                "name", str(ev.get("tid"))
+            )
+    return procs, threads
+
+
+def _spans(events: list[dict]) -> list[dict]:
+    return [ev for ev in events if ev.get("ph") == "X"]
+
+
+def _fmt_us(us: float) -> str:
+    if us >= 1e6:
+        return f"{us / 1e6:.2f}s"
+    if us >= 1e3:
+        return f"{us / 1e3:.1f}ms"
+    return f"{us:.0f}us"
+
+
+def report(events: list[dict], top: int = 10) -> list[str]:
+    """The report lines for one trace (printing is the caller's job)."""
+    procs, threads = _names(events)
+    spans = _spans(events)
+    lines: list[str] = []
+    if not spans:
+        return ["trace has no span events"]
+
+    def track_of(ev: dict) -> str:
+        return procs.get(ev.get("pid"), str(ev.get("pid")))
+
+    def thread_of(ev: dict) -> str:
+        return threads.get(
+            (ev.get("pid"), ev.get("tid")), str(ev.get("tid"))
+        )
+
+    # -- top spans ---------------------------------------------------------
+    lines.append(f"top {min(top, len(spans))} spans by duration:")
+    for ev in sorted(spans, key=lambda e: -e.get("dur", 0))[:top]:
+        attrs = ev.get("args", {})
+        bench = attrs.get("bench")
+        suffix = f"  bench={bench}" if bench else ""
+        lines.append(
+            f"  {_fmt_us(ev.get('dur', 0)):>8}  "
+            f"{track_of(ev)}/{thread_of(ev)}  {ev.get('name')}{suffix}"
+        )
+
+    # -- engine per-stage share -------------------------------------------
+    stage_us: dict[str, float] = defaultdict(float)
+    for ev in spans:
+        if track_of(ev) == "engine":
+            stage_us[ev.get("name", "?")] += ev.get("dur", 0)
+    if stage_us:
+        total = sum(stage_us.values())
+        lines.append("")
+        lines.append(f"engine stages ({_fmt_us(total)} total):")
+        for name, us in sorted(stage_us.items(), key=lambda kv: -kv[1]):
+            share = us / total * 100 if total else 0.0
+            lines.append(f"  {share:5.1f}%  {_fmt_us(us):>8}  {name}")
+
+    # -- serve lane utilization -------------------------------------------
+    # Busy time = sum of request durations on the lane's track; window =
+    # the lane's first start to last end. Overlap within a lane (depth>1
+    # windows) can push utilization past 100% — that is pipelining, and
+    # worth seeing.
+    lanes: dict[str, list[tuple[float, float]]] = defaultdict(list)
+    for ev in spans:
+        if track_of(ev) == "serve" and ev.get("name") == "request":
+            lanes[thread_of(ev)].append(
+                (ev.get("ts", 0.0), ev.get("dur", 0.0))
+            )
+    if lanes:
+        lines.append("")
+        lines.append("serve lanes:")
+        for lane, rows in sorted(lanes.items()):
+            busy = sum(dur for _, dur in rows)
+            start = min(ts for ts, _ in rows)
+            end = max(ts + dur for ts, dur in rows)
+            window = end - start
+            util = busy / window * 100 if window > 0 else 0.0
+            lines.append(
+                f"  {lane}: {len(rows)} requests, busy {_fmt_us(busy)} "
+                f"over {_fmt_us(window)} ({util:.0f}% util)"
+            )
+
+    # -- batcher summary ---------------------------------------------------
+    batches: dict[str, list[dict]] = defaultdict(list)
+    for ev in spans:
+        if track_of(ev) == "batcher":
+            batches[thread_of(ev)].append(ev)
+    if batches:
+        lines.append("")
+        lines.append("batcher queues:")
+        for queue, rows in sorted(batches.items()):
+            slots = sum(ev.get("args", {}).get("width", 0) for ev in rows)
+            filled = sum(ev.get("args", {}).get("filled", 0) for ev in rows)
+            causes: dict[str, int] = defaultdict(int)
+            for ev in rows:
+                causes[ev.get("args", {}).get("cause", "?")] += 1
+            cause_s = ", ".join(
+                f"{k}={v}" for k, v in sorted(causes.items())
+            )
+            occ = filled / slots * 100 if slots else 0.0
+            lines.append(
+                f"  {queue}: {len(rows)} batches, occupancy {occ:.0f}% "
+                f"({filled}/{slots} slots), causes: {cause_s}"
+            )
+    return lines
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        description="Summarize a --trace-out Chrome trace-event file"
+    )
+    ap.add_argument("trace", help="path to the trace JSON")
+    ap.add_argument("--top", type=int, default=10,
+                    help="how many top spans to list (default 10)")
+    args = ap.parse_args(argv)
+    try:
+        events = load_trace(args.trace)
+    except TraceError as e:
+        print(f"error: {e}", file=sys.stderr)
+        return 2
+    for line in report(events, top=args.top):
+        print(line)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
