@@ -1,0 +1,12 @@
+"""Static contract checker for the repro suite (``python -m repro.check``).
+
+Parses the tree with the stdlib ``ast`` module — no imports of the
+checked code, no third-party dependencies — and enforces the invariants
+the suite's correctness rests on: workload/kernel registration contracts,
+cache-key completeness, stage-timing discipline, record-schema stability,
+and lock discipline in the serving/observability layers.
+"""
+
+from repro.check.core import Checker, Context, Finding, all_checkers, run_checks
+
+__all__ = ["Checker", "Context", "Finding", "all_checkers", "run_checks"]

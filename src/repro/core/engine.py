@@ -995,11 +995,17 @@ class Engine:
         if cached is not None and cached.info is not None:
             self.cache.hits += 1
             return cached.info
-        args, placement = self._stage_place(workload, args, requested)
-        entry = self._stage_compile(
-            spec, workload, args, plan, preset, backward, placement, impl
-        )
-        return self._stage_characterize(workload, entry, backward)
+        # Characterize-only flows still emit stage spans (no-ops under
+        # NULL_TRACER) so traced dry runs account for where time went.
+        timings: dict[str, float] = {}
+        with self._timed_stage("place", timings, bench=spec.name):
+            args, placement = self._stage_place(workload, args, requested)
+        with self._timed_stage("compile", timings, bench=spec.name):
+            entry = self._stage_compile(
+                spec, workload, args, plan, preset, backward, placement, impl
+            )
+        with self._timed_stage("characterize", timings, bench=spec.name):
+            return self._stage_characterize(workload, entry, backward)
 
     # -- orchestration -----------------------------------------------------
 

@@ -64,7 +64,6 @@ stay cold — or read the windowed column, which amortizes dispatch.
 
 from __future__ import annotations
 
-import dataclasses
 import hashlib
 import json
 import os

@@ -25,7 +25,7 @@ re-run against a warm engine to reuse every compiled executable.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Mapping, Sequence
+from typing import Any, Mapping
 
 from repro.core.registry import BenchmarkSpec, Workload, all_benchmarks
 

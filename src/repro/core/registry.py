@@ -54,6 +54,14 @@ compiles and times:
 - Like ``batch_dims``, the declaration is semantic: both implementations
   must compute the same function (tests pin pallas-vs-xla agreement
   against the ``kernels/ref.py`` oracles).
+
+**Enforcement.** Both contracts are checked statically by
+``python -m repro.check`` (rule ``workload-contract``): every Workload
+under the bench levels must pass ``batch_dims`` explicitly (``None`` is
+the opt-out, *omitting it* is a finding), and every ``pallas_kernel``
+string must name a ``PALLAS_OPS`` entry whose module exports a
+well-formed ``tune_space()``. The checker runs in CI's lint job, so a
+registration that breaks these rules fails before anything compiles.
 """
 
 from __future__ import annotations

@@ -148,6 +148,15 @@ batching semantics:
   = 1 - occupancy), plus per-bucket p50/p95/p99 in bucket_latency_us.
   Latency is stamped from the scheduled arrival, so time spent waiting in
   a coalescing queue counts toward latency and goodput.
+
+static contracts:
+  the invariants this suite depends on (Workload batch_dims/pallas_kernel
+  declarations, cache-key completeness, _timed_stage coverage, the
+  zero-overhead hot-loop rule, record-schema stability, serve/obs lock
+  discipline) are enforced by `python -m repro.check` — stdlib-ast only,
+  no JAX needed, wired into CI as the lint job and locally via
+  `tools/smoke.sh --check`. See `python -m repro.check --help` for rule
+  ids and the per-line suppression comment.
 """
 
 

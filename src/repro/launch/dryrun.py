@@ -37,7 +37,6 @@ import jax.numpy as jnp
 
 from repro.configs import ARCHS, get_config
 from repro.core.metrics import (
-    TPUv5e,
     collective_ops_from_hlo,
     model_flops,
     roofline_terms,

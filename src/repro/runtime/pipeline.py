@@ -14,7 +14,6 @@ for jamba (the most collective-bound cell).
 
 from __future__ import annotations
 
-import functools
 from typing import Callable
 
 import jax

@@ -6,7 +6,6 @@ import pytest
 pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
-import jax
 import jax.numpy as jnp
 
 _settings = settings(max_examples=15, deadline=None)

@@ -1,6 +1,5 @@
 """Suite infrastructure: registry (Table I), presets, harness, results."""
 
-import numpy as np
 import pytest
 
 from repro.core import (

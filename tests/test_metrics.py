@@ -1,7 +1,5 @@
 """Roofline metrics: flop conventions, HLO collective parsing, classification."""
 
-import numpy as np
-
 import jax
 import jax.numpy as jnp
 

@@ -6,10 +6,8 @@ import pytest
 pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
-import jax
 import jax.numpy as jnp
 
-from repro.kernels import ref
 from repro.kernels.bitonic_sort import bitonic_sort_pallas
 from repro.kernels.prefix_scan import prefix_scan_pallas
 from repro.kernels.softmax import softmax_pallas

@@ -4,7 +4,6 @@ import numpy as np
 import pytest
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.configs import ARCHS, get_config, get_smoke_config

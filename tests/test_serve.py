@@ -19,7 +19,7 @@ from repro.serve.client import (
     run_closed_loop_threaded,
     run_open_loop_threaded,
 )
-from repro.serve.lanes import Completion, DispatchLane, LaneSet, serve_loop
+from repro.serve.lanes import Completion, DispatchLane, LaneSet
 from repro.serve.latency import LatencyStats, stats_from_completions
 from repro.serve.loadgen import (
     Request,

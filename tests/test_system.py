@@ -1,7 +1,5 @@
 """End-to-end behaviour tests for the whole system."""
 
-import dataclasses
-
 import numpy as np
 
 import jax

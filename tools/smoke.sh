@@ -39,6 +39,11 @@
 # within 10% of the run's wall time, that the final metadata line holds
 # the counter snapshot, and that tools/trace_report.py reads the file.
 #
+# With --check, instead run the static lint leg: the repro.check contract
+# checker (AST-only, needs no JAX) must exit clean, and ruff (F/E9/B
+# scope, see ruff.toml) runs when installed. This is the only leg that
+# works on a bare Python install.
+#
 # With --bench [PATH], instead write the perf-trajectory artifact
 # (default artifacts/BENCH_7.json): loop vs lanes vs dynamic-batcher
 # latency/goodput over one fixed seeded mixed-shape trace (the
@@ -50,6 +55,16 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 out="$(mktemp -d)"
 trap 'rm -rf "$out"' EXIT
+
+if [[ "${1:-}" == "--check" ]]; then
+  python -m repro.check
+  if command -v ruff >/dev/null 2>&1; then
+    ruff check .
+  else
+    echo "# ruff not installed; skipping lint (repro.check still enforced)" >&2
+  fi
+  exit 0
+fi
 
 if [[ "${1:-}" == "--multi-device" ]]; then
   export XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}"
