@@ -21,7 +21,8 @@ rules (see --list-rules for one-line summaries):
   cache-key           plan/placement axes join both cache keys
   stage-discipline    _timed_stage coverage + zero-overhead hot loops
   schema-drift        BenchmarkRecord shape vs committed fingerprint
-  concurrency         lock-owning serve/obs classes mutate under the lock
+  concurrency         lock-owning serve/obs/dist classes mutate under the lock
+  dist-proto          every dist/proto.py message registered + round-trips
 
 suppressing a finding:
   put `# repro-check: ignore[<rule>]` on the flagged line or the line

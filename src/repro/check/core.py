@@ -165,6 +165,7 @@ def _load_rules() -> None:
         cachekey,
         concurrency,
         contracts,
+        distproto,
         schema,
         stages,
     )

@@ -198,7 +198,9 @@ class Engine:
         # Optional cross-process persistence of compile artifacts (two
         # tiers: serialized executables over lowered HLO text) — warm
         # entries skip retracing, and usually XLA compilation too. None =
-        # in-process only.
+        # in-process only. The raw root is kept so distributed client
+        # processes can be pointed at the same cache.
+        self.cache_dir = cache_dir
         self.disk_cache = HloDiskCache(cache_dir) if cache_dir else None
         # Structured tracing (repro.obs): every _stage_* becomes a span,
         # serve completions and batch executions become retrospective
@@ -351,24 +353,20 @@ class Engine:
                     executable=fn,
                     info=empty_compiled_info(_pass_name(workload, backward)),
                 )
-            # Disk cache (single-device entries only: multi-device lowerings
-            # embed placement-dependent shardings and device assignments):
-            # a warm entry skips the retrace — and, when the serialized
-            # executable deserializes, the XLA compile too; a cold or
-            # failed one falls through. Multi-device skips are *recorded*
-            # in the cache diagnostics, not silently dropped.
-            if self.disk_cache is not None and placement.devices > 1:
-                self.disk_cache.note_skip(
-                    key,
-                    f"multi-device placement ({placement.devices}x"
-                    f"{placement.mode}): lowering embeds device assignment",
-                )
+            # Disk cache: a warm entry skips the retrace — and, when the
+            # serialized executable deserializes, the XLA compile too; a
+            # cold or failed one falls through. Multi-device lowerings
+            # embed placement-dependent shardings and device assignments,
+            # so they persist through the sharded tier (AOT-serialized
+            # jax.stages.Compiled under an explicit topology key) instead
+            # of the raw single-device executable tier.
             return self._compile_through_caches(
                 key, workload, fn, args,
                 pass_name=_pass_name(workload, backward),
                 impl=impl,
                 tuned_params=tuned_params,
-                use_disk=self.disk_cache is not None and placement.devices == 1,
+                use_disk=self.disk_cache is not None,
+                sharded=placement.devices > 1,
             )
 
         return self.cache.lookup(key, build)
@@ -384,15 +382,19 @@ class Engine:
         impl: str,
         tuned_params: dict | None,
         use_disk: bool,
+        sharded: bool = False,
     ) -> _CacheEntry:
         """Lower + compile one program through the disk cache: a warm
         entry skips the retrace — and, when the serialized executable
         deserializes, the XLA compile too. Shared by the measure-path
         compile stage and the mixed-shape serve stage's per-(bucket,
         width) executables, so every bucket persists and restores exactly
-        like a measure executable."""
+        like a measure executable. ``sharded`` routes multi-device
+        programs through the cache's sharded tier (the lowering embeds
+        device assignments, so it persists as an AOT-serialized
+        ``jax.stages.Compiled`` rather than a raw executable blob)."""
         if use_disk:
-            loaded = self.disk_cache.load(key, args)
+            loaded = self.disk_cache.load(key, args, sharded=sharded)
             if loaded is not None:
                 executable, info = loaded
                 return _CacheEntry(executable=executable, info=info)
@@ -404,7 +406,7 @@ class Engine:
             lowered = jax.jit(fn).lower(*args)
         compiled = lowered.compile()
         if use_disk:
-            self.disk_cache.store(key, lowered, compiled, pass_name)
+            self.disk_cache.store(key, lowered, compiled, pass_name, sharded=sharded)
         return _CacheEntry(executable=compiled)
 
     def _stage_tune(
@@ -899,6 +901,26 @@ class Engine:
         if serve.is_mixed:
             stats = self._serve_mixed(
                 spec, plan, preset, placement, impl, tuned_params
+            )
+            return stats, None, None, []
+        if serve.client_procs > 0:
+            # Distributed load generation (repro.dist): N client
+            # processes, each compiling through the shared cache dir and
+            # replaying its own seeded sub-schedule; the launcher merges
+            # their completion streams into one stats object carrying
+            # per-process QPS.
+            from repro.dist.launcher import run_distributed
+
+            stats = run_distributed(
+                benchmark=spec.name,
+                preset=preset,
+                overrides=dict(plan.overrides_for(spec.name)),
+                serve=serve,
+                seed=plan.seed,
+                devices=placement.devices,
+                placement_mode=placement.mode,
+                impl=impl,
+                cache_dir=self.cache_dir,
             )
             return stats, None, None, []
         call = lambda: entry.executable(*args)  # noqa: E731

@@ -29,16 +29,27 @@ compiles. The same versioned directory scopes it: an edited kernel or a
 new toolchain invalidates winners along with executables.
 
 Entries are versioned by ``jax.__version__``, ``jaxlib.__version__``, the
-backend, a topology token (device kind × device count — a serialized
-executable is compiled *for* a device), and a content hash of the
-``repro`` package source (a new toolchain *or an edited kernel* gets a
-fresh directory rather than stale artifacts), keyed by a hash of the
-engine's compile-cache key. Entries are scoped to **single-device**
-placements: multi-device lowerings embed placement-dependent shardings
-and device assignments, so the engine *skips* the disk cache for them —
-and the skip is counted and named (``skips`` / ``skip_reasons``) rather
-than silent, so a sweep whose multi-device steps never hit is diagnosable
-from ``summary()``.
+backend, an explicit topology token (device kind × device count ×
+process count — a serialized executable is compiled *for* a topology),
+and a content hash of the ``repro`` package source (a new toolchain *or
+an edited kernel* gets a fresh directory rather than stale artifacts),
+keyed by a hash of the engine's compile-cache key.
+
+**Multi-device (sharded) entries** persist too: their lowerings embed
+placement-dependent shardings and device assignments, so the raw
+executable tier would silently collapse outputs to one shard. They go
+through a dedicated sharded tier instead — the whole
+``jax.stages.Compiled`` AOT-serialized via
+``jax.experimental.serialize_executable`` (payload + in/out trees), which
+round-trips sharding, argument pruning, and the pytree call convention.
+A sharded entry has **no HLO-text tier**: recompiling the stored text
+would target a single device, so an unusable sharded blob degrades
+straight to retracing. Each sharded payload records the topology it was
+compiled for and a load under a different topology is a counted
+fallback, never a wrong answer. (Pre-v3 behaviour — skipping the disk
+cache for multi-device placements, counted in ``skips`` — is retired;
+``note_skip`` remains for callers that decline lookups for other
+reasons.)
 
 Every warm load is validated by one trial execution; *any* failure —
 corrupt file, toolchain drift, call-convention mismatch — degrades one
@@ -67,6 +78,7 @@ from __future__ import annotations
 import hashlib
 import json
 import os
+import pickle
 import re
 from typing import Any, Callable
 
@@ -78,7 +90,10 @@ from repro.core.metrics import roofline_terms
 
 __all__ = ["HloDiskCache"]
 
-_FORMAT_VERSION = 2  # v2: sidecar serialized-executable tier
+# v2: sidecar serialized-executable tier
+# v3: sharded tier (AOT-serialized jax.stages.Compiled for multi-device
+#     placements) + explicit topology recorded per payload
+_FORMAT_VERSION = 3
 _MAX_REASONS = 20  # keep fallback/skip reason lists bounded
 
 
@@ -119,12 +134,25 @@ def _source_digest() -> str:
 
 
 def _topology_token() -> str:
-    """Device kind × count: a serialized executable is compiled for a
-    device, so a different accelerator (or forced host-device count) must
-    get its own cache directory, not a deserialization failure."""
+    """Device kind × device count × process count: a serialized
+    executable is compiled for a topology, so a different accelerator, a
+    different forced host-device count, or a different ``jax.distributed``
+    process count must get its own cache directory, not a
+    deserialization failure. (Distributed serving clients share the
+    launcher's environment, so they land in the same directory.)"""
     devices = jax.devices()
     kind = re.sub(r"[^A-Za-z0-9_.-]+", "_", devices[0].device_kind) or "unknown"
-    return f"{kind}x{len(devices)}"
+    return f"{kind}x{len(devices)}p{jax.process_count()}"
+
+
+def _topology_dict() -> dict:
+    """The explicit topology a sharded payload was compiled for."""
+    devices = jax.devices()
+    return {
+        "kind": devices[0].device_kind,
+        "devices": len(devices),
+        "processes": jax.process_count(),
+    }
 
 
 def _jaxlib_version() -> str:
@@ -289,12 +317,25 @@ class HloDiskCache:
 
     # -- store -------------------------------------------------------------
 
-    def store(self, key: tuple, lowered: Any, compiled: Any, name: str) -> None:
+    def store(
+        self,
+        key: tuple,
+        lowered: Any,
+        compiled: Any,
+        name: str,
+        *,
+        sharded: bool = False,
+    ) -> None:
         """Persist one compile: the HLO-text payload, and — when the
         backend supports AOT serialization — the executable sidecar.
         Best-effort: outputs that are not a flat tuple of arrays, or
         analyses this backend does not expose, simply skip the store — a
-        miss next run, never an error this run."""
+        miss next run, never an error this run. ``sharded`` routes
+        multi-device programs through the sharded tier (the whole
+        ``jax.stages.Compiled`` serialized, no HLO-text fallback)."""
+        if sharded:
+            self._store_sharded(key, compiled, name)
+            return
         try:
             out = _flat_out_structure(lowered.out_info)
             if out is None:
@@ -351,10 +392,56 @@ class HloDiskCache:
         except Exception:  # noqa: BLE001 — persistence is advisory
             return
 
+    def _store_sharded(self, key: tuple, compiled: Any, name: str) -> None:
+        """Persist one multi-device compile: the AOT-serialized
+        ``jax.stages.Compiled`` (sharding, argument pruning, and pytree
+        call convention all round-trip) plus a payload recording the
+        explicit topology it was compiled for. The sidecar is written
+        first — a payload without its blob is useless here (there is no
+        HLO-text tier for sharded entries), so a failed blob write stores
+        nothing and a failed payload write removes the orphan."""
+        exe_path = self._exe_path(key)
+        try:
+            from repro.core.harness import _memory_analysis_dict
+            from repro.core.metrics import (
+                collective_bytes_from_hlo,
+                cost_analysis_dict,
+            )
+
+            payload = {
+                "format": _FORMAT_VERSION,
+                "name": name,
+                "sharded": True,
+                "topology": _topology_dict(),
+                "cost": cost_analysis_dict(compiled),
+                "memory": _memory_analysis_dict(compiled),
+                "collective_bytes": collective_bytes_from_hlo(compiled.as_text()),
+            }
+            blob = _serialize_sharded(compiled)
+            tmp = exe_path + ".tmp"
+            with open(tmp, "wb") as f:
+                f.write(blob)
+            os.replace(tmp, exe_path)
+            path = self._path(key)
+            tmp = path + ".tmp"
+            with open(tmp, "w") as f:
+                json.dump(payload, f)
+            os.replace(tmp, path)
+            self.stores += 1
+            self.exe_stores += 1
+        except Exception:  # noqa: BLE001 — persistence is advisory
+            for stale in (exe_path + ".tmp", exe_path):
+                if os.path.exists(stale):
+                    try:
+                        os.remove(stale)
+                    except OSError:
+                        pass
+            return
+
     # -- load --------------------------------------------------------------
 
     def load(
-        self, key: tuple, args: tuple
+        self, key: tuple, args: tuple, *, sharded: bool = False
     ) -> tuple[Callable[..., Any], CompiledInfo] | None:
         """Restore one compile from disk, best tier first.
 
@@ -363,8 +450,12 @@ class HloDiskCache:
         retrace). Either way the memoized characterization is rebuilt and
         one trial execution validates the call convention; any failure
         degrades to the next tier and — unless the entry simply wasn't
-        there — is counted and named in the fallback diagnostics. Returns
-        None when the caller must retrace."""
+        there — is counted and named in the fallback diagnostics.
+        ``sharded`` loads go through the sharded tier only: the stored
+        ``jax.stages.Compiled`` is deserialized under the recorded
+        topology (a mismatch is a counted fallback) with no HLO-text
+        fallback — recompiling sharded text would target one device.
+        Returns None when the caller must retrace."""
         path = self._path(key)
         if not os.path.exists(path):
             self.misses += 1  # cold miss: nothing to fall back from
@@ -374,28 +465,37 @@ class HloDiskCache:
                 payload = json.load(f)
             if payload.get("format") != _FORMAT_VERSION:
                 raise ValueError("stale cache format")
-            n_outputs = int(payload["n_outputs"])
-            single = bool(payload["single"])
-            kept = payload.get("kept_args")
-            kept = [int(i) for i in kept] if kept is not None else None
-            executable = None
-            exe_path = self._exe_path(key)
-            if os.path.exists(exe_path):
-                try:
-                    with open(exe_path, "rb") as f:
-                        blob = f.read()
-                    executable = _deserialize_executable(
-                        blob, n_outputs, single, kept
+            if bool(payload.get("sharded", False)) != sharded:
+                raise ValueError(
+                    "entry tier mismatch: stored "
+                    f"sharded={payload.get('sharded', False)!r}, "
+                    f"requested sharded={sharded!r}"
+                )
+            if sharded:
+                topology = payload.get("topology")
+                if topology != _topology_dict():
+                    raise ValueError(
+                        f"topology mismatch: entry compiled for {topology}, "
+                        f"host is {_topology_dict()}"
                     )
-                    jax.block_until_ready(executable(*args))  # trial call
-                except Exception as e:  # noqa: BLE001 — degrade to tier 2
-                    self._note_exe_fallback(key, e)
-                    executable = None
-            via_exe = executable is not None
-            if executable is None:
-                executable = _compile_text(payload["hlo"], n_outputs, single, kept)
-                self.xla_compiles += 1
+                with open(self._exe_path(key), "rb") as f:
+                    blob = f.read()
+                executable = _deserialize_sharded(blob)
                 jax.block_until_ready(executable(*args))  # trial call
+                via_exe = True
+            else:
+                executable = self._load_single(key, payload, args)
+                via_exe = executable is not None
+                if executable is None:
+                    n_outputs = int(payload["n_outputs"])
+                    single = bool(payload["single"])
+                    kept = payload.get("kept_args")
+                    kept = [int(i) for i in kept] if kept is not None else None
+                    executable = _compile_text(
+                        payload["hlo"], n_outputs, single, kept
+                    )
+                    self.xla_compiles += 1
+                    jax.block_until_ready(executable(*args))  # trial call
             info = CompiledInfo(
                 name=payload["name"],
                 cost=dict(payload["cost"]),
@@ -416,6 +516,30 @@ class HloDiskCache:
         else:
             self.hlo_hits += 1
         return executable, info
+
+    def _load_single(
+        self, key: tuple, payload: dict, args: tuple
+    ) -> Callable[..., Any] | None:
+        """Tier-1 attempt for a single-device entry: the raw serialized
+        executable, trial-called; None (with the exe fallback counted)
+        when the blob is missing or no longer deserializes — the caller
+        then degrades to tier 2."""
+        exe_path = self._exe_path(key)
+        if not os.path.exists(exe_path):
+            return None
+        n_outputs = int(payload["n_outputs"])
+        single = bool(payload["single"])
+        kept = payload.get("kept_args")
+        kept = [int(i) for i in kept] if kept is not None else None
+        try:
+            with open(exe_path, "rb") as f:
+                blob = f.read()
+            executable = _deserialize_executable(blob, n_outputs, single, kept)
+            jax.block_until_ready(executable(*args))  # trial call
+        except Exception as e:  # noqa: BLE001 — degrade to tier 2
+            self._note_exe_fallback(key, e)
+            return None
+        return executable
 
 
 def _kept_arg_indices(compiled: Any) -> list[int] | None:
@@ -453,6 +577,26 @@ def _wrap_executable(
         return outs[0] if single else tuple(outs)
 
     return call
+
+
+def _serialize_sharded(compiled: Any) -> bytes:
+    """AOT-serialize a (possibly multi-device) ``jax.stages.Compiled``
+    whole: executable payload plus input/output pytree defs. Unlike the
+    raw-executable tier, deserializing this reproduces sharded outputs
+    and the jit call convention (pruned args included)."""
+    from jax.experimental import serialize_executable as jse
+
+    payload, in_tree, out_tree = jse.serialize(compiled)
+    return pickle.dumps((payload, in_tree, out_tree))
+
+
+def _deserialize_sharded(blob: bytes) -> Callable[..., Any]:
+    """Sharded tier: bytes → a loaded ``jax.stages.Compiled`` (callable
+    with the original arguments), with zero XLA compilation."""
+    from jax.experimental import serialize_executable as jse
+
+    payload, in_tree, out_tree = pickle.loads(blob)
+    return jse.deserialize_and_load(payload, in_tree, out_tree)
 
 
 def _serialize_executable(compiled: Any) -> bytes:

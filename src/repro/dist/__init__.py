@@ -1,0 +1,29 @@
+"""Multi-process scale-out: distributed load generation over a local
+socket protocol.
+
+One Python process tops out at a host dispatch ceiling long before the
+device does — the serving client can only issue so many requests per
+second from one interpreter. This package breaks that ceiling the way a
+multi-host deployment does: N client *processes*, each replaying a seeded
+per-process sub-schedule (``SeedSequence.spawn`` off the plan seed, so
+the merged arrival stream is still Poisson at the target QPS and
+byte-identical per seed), each compiling through the shared
+``HloDiskCache`` (a warm distributed run performs zero XLA compiles in
+every process), streaming per-request completion stamps back to the
+launcher for merged percentile / goodput accounting.
+
+- :mod:`repro.dist.proto` — the wire format: length-prefixed JSON
+  messages (Hello / Assign / Ready / Start / Stamp / Done / Error) over a
+  local TCP socket.
+- :mod:`repro.dist.client_proc` — the ``python -m repro.dist.client_proc``
+  entrypoint one client process runs: connect, receive its assignment,
+  build + compile the workload, replay its sub-schedule, stream stamps.
+- :mod:`repro.dist.launcher` — spawns and supervises the clients from the
+  engine process, synchronizes the start epoch, merges the completion
+  streams into one :class:`~repro.serve.latency.LatencyStats` with
+  per-process QPS.
+
+Selected via ``ServeSpec.client_procs`` (CLI ``--client-procs N``); the
+engine's serve stage routes to :func:`repro.dist.launcher.run_distributed`
+when it is nonzero.
+"""

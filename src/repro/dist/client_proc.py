@@ -1,0 +1,161 @@
+"""One distributed load-generation client: ``python -m repro.dist.client_proc``.
+
+Spawned by :mod:`repro.dist.launcher`, one per ``ServeSpec.client_procs``.
+The client connects back to the launcher, receives its :class:`Assign`,
+rebuilds and compiles the assigned workload through its *own* engine —
+against the shared ``--cache-dir``, so a warm distributed run restores
+every process's executable with zero XLA compiles — derives its
+per-process sub-schedule (``open_loop_lane_schedules`` with
+``n_lanes=n_procs``, indexed by ``proc_id``: the same ``SeedSequence.spawn``
+split the threaded client uses per lane, so the merged stream is Poisson
+at the target QPS and byte-identical per seed), waits for the shared
+start epoch, replays the sub-schedule with the in-process open-loop
+runner, and streams epoch-relative completion stamps back.
+
+The process inherits the launcher's environment (``XLA_FLAGS`` included),
+so a forced-host-device CI topology applies to every client identically.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import socket
+import sys
+import time
+import traceback
+
+from repro.dist.proto import (
+    Assign,
+    Done,
+    Error,
+    Hello,
+    Ready,
+    Stamp,
+    Start,
+    recv_msg,
+    send_msg,
+)
+
+# Stamp rows per frame: large enough to amortize framing, small enough
+# that one frame never approaches MAX_FRAME_BYTES.
+_STAMP_BATCH = 512
+
+
+def _run_assignment(sock: socket.socket, a: Assign) -> None:
+    """Build → compile → sync → replay → stream, for one assignment."""
+    from repro.core.engine import Engine
+    from repro.core.plan import ExecutionPlan, Placement, ServeSpec
+    from repro.core.registry import get_benchmark
+    from repro.serve.lanes import run_open_loop
+    from repro.serve.loadgen import open_loop_lane_schedules
+
+    serve_fields = dict(a.serve)
+    serve_fields["client_procs"] = 0  # this process IS one client
+    serve = ServeSpec(**serve_fields)
+    spec = get_benchmark(a.benchmark)
+    engine = Engine(cache_dir=a.cache_dir)
+    plan = ExecutionPlan(
+        names=(a.benchmark,),
+        preset=a.preset,
+        overrides=(
+            ((a.benchmark, tuple(sorted(a.overrides.items()))),)
+            if a.overrides
+            else ()
+        ),
+        include_backward=False,
+        seed=a.seed,
+        placement=Placement(devices=a.devices, mode=a.placement),
+        impl=a.impl,
+        serve=serve,
+    )
+    workload, args = engine._stage_build(spec, plan, a.preset)
+    args, placement = engine._stage_place(
+        workload, args, plan.placement_at(a.devices)
+    )
+    impl, _ = engine._resolve_impl(workload, plan, False)
+    entry = engine._stage_compile(
+        spec, workload, args, plan, a.preset, False, placement, impl
+    )
+    call = lambda: entry.executable(*args)  # noqa: E731
+
+    # This process's slice of the merged Poisson stream. Deterministic:
+    # every process derives the same n_procs-way split from the shared
+    # seed and takes its own index.
+    sub = open_loop_lane_schedules(
+        qps=serve.qps,
+        duration_s=serve.duration_s,
+        n_lanes=a.n_procs,
+        seed=a.seed,
+        warmup=a.warmup,
+    )[a.proc_id]
+
+    send_msg(sock, Ready(proc_id=a.proc_id, requests=len(sub)))
+    start = recv_msg(sock)
+    if not isinstance(start, Start):
+        raise RuntimeError(f"expected Start, got {type(start).__name__}")
+    # Shared origin: sleep until the wall-clock epoch, then pair a
+    # perf_counter reading with a wall reading so stamps rebase onto
+    # "seconds since epoch" — one axis across all processes.
+    delay = start.epoch - time.time()
+    if delay > 0:
+        time.sleep(delay)
+    pc_ref = time.perf_counter()
+    wall_ref = time.time()
+    completions = run_open_loop(
+        call, sub, n_lanes=serve.lanes, concurrency=serve.concurrency
+    )
+    shift = (wall_ref - start.epoch) - pc_ref
+
+    rows = [
+        [c.index, c.lane, c.t_submit + shift, c.t_done + shift, c.warmup]
+        for c in completions
+    ]
+    for i in range(0, len(rows), _STAMP_BATCH):
+        send_msg(
+            sock, Stamp(proc_id=a.proc_id, completions=rows[i : i + _STAMP_BATCH])
+        )
+    counters = (
+        engine.disk_cache.counter_dict() if engine.disk_cache is not None else None
+    )
+    send_msg(
+        sock,
+        Done(
+            proc_id=a.proc_id,
+            requests=len(rows),
+            truncated=sub.truncated,
+            cache_counters=counters,
+        ),
+    )
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, required=True)
+    ap.add_argument("--proc-id", type=int, required=True)
+    args = ap.parse_args(argv)
+
+    sock = socket.create_connection((args.host, args.port), timeout=60)
+    # The replay phase blocks in recv for Start while the launcher waits
+    # for every process to compile; no per-op timeout once connected.
+    sock.settimeout(None)
+    try:
+        send_msg(sock, Hello(proc_id=args.proc_id, pid=os.getpid()))
+        assign = recv_msg(sock)
+        if not isinstance(assign, Assign):
+            raise RuntimeError(f"expected Assign, got {type(assign).__name__}")
+        try:
+            _run_assignment(sock, assign)
+        except Exception as e:  # noqa: BLE001 — report, then die loudly
+            traceback.print_exc()
+            msg = " ".join(f"{type(e).__name__}: {e}".split())[:500]
+            send_msg(sock, Error(proc_id=args.proc_id, message=msg))
+            return 1
+        return 0
+    finally:
+        sock.close()
+
+
+if __name__ == "__main__":
+    sys.exit(main())

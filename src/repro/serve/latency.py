@@ -111,6 +111,11 @@ def stats_from_completions(
     padding_waste: float | None = None,
     n_batches: int | None = None,
 ) -> LatencyStats:
+    if not completions:
+        raise ValueError(
+            "no completions at all: the schedule was empty (duration too "
+            "short for any arrival at this qps); raise --duration or --qps"
+        )
     measured = [c for c in completions if not c.warmup]
     warmup = len(completions) - len(measured)
     if not measured:

@@ -126,6 +126,12 @@ def open_loop_schedule(
     _validate_open_loop(qps, duration_s)
     rng = np.random.default_rng(seed)
     arrivals = _poisson_arrivals(rng, qps, duration_s, max_requests)
+    if not arrivals:
+        # A duration too small for even one Poisson arrival is a valid
+        # (if degenerate) request: return an explicitly empty schedule
+        # rather than letting downstream stats raise a confusing error.
+        # Empty is never "truncated" — nothing was cut short.
+        return Schedule(requests=(), offered_qps=qps, truncated=False)
     requests = tuple(
         Request(index=i, arrival_s=t, warmup=i < warmup)
         for i, t in enumerate(arrivals)

@@ -381,6 +381,75 @@ def test_concurrency_skips_lockfree_and_locked_classes(tmp_path):
     assert run_checks(root, rules=["concurrency"]) == []
 
 
+def test_concurrency_covers_dist_scope(tmp_path):
+    root = write_tree(tmp_path, {"src/repro/dist/sink.py": SINK_UNLOCKED})
+    findings = run_checks(root, rules=["concurrency"])
+    assert rule_lines(findings, "concurrency") == [
+        ("src/repro/dist/sink.py", 9)
+    ]
+
+
+# --- dist-proto ----------------------------------------------------------
+
+
+PROTO_UNREGISTERED = """\
+    import dataclasses
+
+    @dataclasses.dataclass(frozen=True)
+    class Hello:
+        proc_id: int
+
+    @dataclasses.dataclass(frozen=True)
+    class Rogue:
+        payload: str
+
+    MESSAGE_TYPES = {"hello": Hello}
+"""
+
+
+def test_dist_proto_fires_on_unregistered_dataclass(tmp_path):
+    root = write_tree(tmp_path, {"src/repro/dist/proto.py": PROTO_UNREGISTERED})
+    findings = run_checks(root, rules=["dist-proto"])
+    assert rule_lines(findings, "dist-proto") == [
+        ("src/repro/dist/proto.py", 8)
+    ]
+    assert "would encode but never decode" in messages(findings)
+    assert main(["--root", str(root), "--rules", "dist-proto"]) == 1
+
+
+def test_dist_proto_fires_on_computed_registry(tmp_path):
+    root = write_tree(
+        tmp_path,
+        {
+            "src/repro/dist/proto.py": """\
+                import dataclasses
+
+                @dataclasses.dataclass(frozen=True)
+                class Hello:
+                    proc_id: int
+
+                MESSAGE_TYPES = dict(hello=Hello)
+            """
+        },
+    )
+    findings = run_checks(root, rules=["dist-proto"])
+    assert "dict literal" in messages(findings)
+
+
+def test_dist_proto_fires_on_non_stdlib_import(tmp_path):
+    root = write_tree(
+        tmp_path,
+        {
+            "src/repro/dist/proto.py": PROTO_UNREGISTERED.replace(
+                "import dataclasses",
+                "import dataclasses\n    import jax",
+            )
+        },
+    )
+    findings = run_checks(root, rules=["dist-proto"])
+    assert "pure-stdlib" in messages(findings)
+
+
 # --- suppression ---------------------------------------------------------
 
 
@@ -487,6 +556,7 @@ def test_live_repo_fingerprint_is_current():
         "stage-discipline",
         "schema-drift",
         "concurrency",
+        "dist-proto",
     ],
 )
 def test_every_rule_is_registered(rule):

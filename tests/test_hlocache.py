@@ -15,7 +15,9 @@ FAST = dict(preset=0, iters=1, warmup=0, include_backward=False)
 
 
 def _version_dir(root: str) -> str:
-    (sub,) = os.listdir(root)  # exactly one toolchain dir for this process
+    # Exactly one toolchain dir for this process; "jax-persistent" is
+    # jax's own compilation cache, colocated but not ours.
+    (sub,) = [d for d in os.listdir(root) if d != "jax-persistent"]
     return os.path.join(root, sub)
 
 
@@ -29,13 +31,13 @@ def test_cold_run_populates_cache_dir_with_versioned_entries(tmp_path):
     assert eng.disk_cache.hits == 0
     version_dir = _version_dir(root)
     # Versioned by toolchain (jax + jaxlib + backend), topology (device
-    # kind x count — serialized executables are compiled *for* a device),
-    # AND a content hash of the repro package, so an edited kernel misses
-    # instead of replaying its old artifacts.
+    # kind x count x process count — serialized executables are compiled
+    # *for* a device topology), AND a content hash of the repro package,
+    # so an edited kernel misses instead of replaying its old artifacts.
     base = os.path.basename(version_dir)
     assert base.startswith(f"jax-{jax.__version__}-jaxlib-")
     assert f"-{jax.default_backend()}-" in base
-    assert f"x{jax.device_count()}-" in base
+    assert f"x{jax.device_count()}p{jax.process_count()}-" in base
     entries = sorted(os.listdir(version_dir))
     # One .json payload + one .exe serialized-executable sidecar per entry.
     assert len(entries) == 4
@@ -180,7 +182,11 @@ def test_suite_cli_prints_cache_summary_with_cache_dir(tmp_path, capsys):
     assert "hlocache:" in err and "stores=1" in err
 
 
-def test_disk_cache_skips_multi_device_entries_with_recorded_reason(tmp_path):
+def test_disk_cache_persists_and_restores_sharded_executables(tmp_path):
+    """Multi-device executables used to be a recorded cache *skip*; they
+    are now a first-class sharded tier (topology-keyed, serialized via
+    jax.experimental.serialize_executable). Cold run stores; a warm run
+    in a fresh process restores with zero XLA compiles."""
     import subprocess
     import sys
     import textwrap
@@ -201,17 +207,39 @@ def test_disk_cache_skips_multi_device_entries_with_recorded_reason(tmp_path):
         ))
         assert res.records[0].status == "ok", res.records[0].error
         dc = eng.disk_cache
-        assert dc.stores == 0, dc.stores
-        # The skip is accounted, not silent: counter + named reason,
-        # surfaced by summary().
-        assert dc.skips == 1, dc.skips
-        assert "multi-device" in dc.last_skip, dc.last_skip
-        assert "gemm_f32_nn" in dc.last_skip, dc.last_skip
-        assert "skips=1" in dc.summary(), dc.summary()
-        print("OK")
+        assert dc.skips == 0, dc.last_skip
+        assert dc.stores == 1, dc.stores
+        assert dc.exe_stores == 1, dc.exe_stores
+        print("COLD-OK")
     """)
     out = subprocess.run(
         [sys.executable, "-c", script], env=env, capture_output=True,
+        text=True, timeout=420,
+    )
+    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
+
+    warm = textwrap.dedent(f"""
+        from repro.core.engine import Engine
+        from repro.core.plan import ExecutionPlan, Placement
+
+        eng = Engine(cache_dir={str(tmp_path / 'hlo')!r})
+        res = eng.run(ExecutionPlan(
+            names=("gemm_f32_nn",), preset=0, iters=1, warmup=0,
+            include_backward=False,
+            placement=Placement(devices=4, mode="shard"),
+        ))
+        assert res.records[0].status == "ok", res.records[0].error
+        dc = eng.disk_cache
+        assert dc.hits == 1, dc.counter_dict()
+        assert dc.exe_hits == 1, dc.counter_dict()
+        assert dc.misses == 0, dc.counter_dict()
+        # The whole point: restoring a sharded executable performs no
+        # XLA compilation at all.
+        assert dc.xla_compiles == 0, dc.counter_dict()
+        print("WARM-OK")
+    """)
+    out = subprocess.run(
+        [sys.executable, "-c", warm], env=env, capture_output=True,
         text=True, timeout=420,
     )
     assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
